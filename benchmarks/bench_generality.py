@@ -1,0 +1,32 @@
+"""Paper Tab. 3: generality/robustness grid over horizon T, arrival
+probability rho, and graph density."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.sched import trace
+from repro.sched.simulator import run_all
+
+
+def run(quick: bool = True):
+    base = dict(L=10, R=64 if quick else 128, K=6, seed=2, contention=10.0)
+    grids = {
+        "T": [(500, {}), (1000, {})] if quick else [(1000, {}), (2000, {}), (5000, {})],
+        "rho": [(r, {"rho": r}) for r in ((0.3, 0.7) if quick else (0.3, 0.5, 0.7, 0.9))],
+        "dense": [
+            (d, {"density": d / 10.0})
+            for d in ((2, 3) if quick else (2, 2.5, 3))
+        ],
+    }
+    for param, settings in grids.items():
+        for val, overrides in settings:
+            T = val if param == "T" else (500 if quick else 2000)
+            cfg = trace.TraceConfig(T=T, **{**base, **overrides})
+            res = run_all(cfg)
+            ranked = sorted(res.items(), key=lambda kv: -kv[1].avg_reward)
+            best = ranked[0][0]
+            row = ";".join(f"{n}={r.avg_reward:.1f}" for n, r in res.items())
+            emit(f"tab3.{param}={val}", 0.0, f"best={best};{row}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Paper Fig. 4: learning-rate eta0 and decay sensitivity (incl. the
+paper's observation that decay 0.9999 beats 1.0001)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import ogasched
+from repro.sched import trace
+
+
+def run(quick: bool = True):
+    T = 500 if quick else 2000
+    cfg = trace.TraceConfig(T=T, L=10, R=64, K=6, seed=4, contention=10.0)
+    spec, arr = trace.make(cfg)
+    for eta0 in (1.0, 25.0, 100.0):
+        rw, _ = ogasched.run(spec, arr, eta0=eta0, decay=0.9999)
+        emit(f"fig4a.eta0={eta0}", 0.0, f"avg={float(rw.mean()):.2f}")
+    for decay in (0.995, 0.9999, 1.0001):
+        rw, _ = ogasched.run(spec, arr, eta0=25.0, decay=decay)
+        emit(f"fig4b.decay={decay}", 0.0, f"avg={float(rw.mean()):.2f}")
+    eta_t = float(ogasched.eta_theoretical(spec, T))
+    rw, _ = ogasched.run(spec, arr, eta0=eta_t, decay=1.0)
+    emit("fig4.eta_theoretical_eq50", 0.0, f"eta={eta_t:.4f};avg={float(rw.mean()):.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,83 @@
+"""Kernel microbenchmarks: Pallas (interpret mode on CPU — correctness
+artifact; timings indicative only) vs jnp reference vs paper-verbatim Alg.1.
+On TPU the same entry points dispatch to compiled Pallas (kernels/ops.py).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import projection
+from repro.kernels import ref
+from repro.kernels.proj_bisect import proj_bisect
+
+
+def run(quick: bool = True):
+    N, L = (256, 64) if quick else (768, 128)  # N = R*K cells
+    key = jax.random.PRNGKey(0)
+    kz, ka, kc = jax.random.split(key, 3)
+    z = jax.random.normal(kz, (N, L)) * 5
+    a = jax.random.uniform(ka, (N, L), minval=0.1, maxval=4.0)
+    mask = jnp.ones((N, L))
+    c = jax.random.uniform(kc, (N,), minval=0.5, maxval=8.0)
+
+    jit_ref = jax.jit(ref.proj_rows_ref)
+    jit_ref(z, a, mask, c).block_until_ready()
+    _, us = timed(jit_ref, z, a, mask, c, repeats=20)
+    emit("kernel.proj.jnp_bisect", us, f"N={N};L={L}")
+
+    out_k = proj_bisect(z, a, mask, c, interpret=True)
+    _, us_k = timed(
+        lambda: proj_bisect(z, a, mask, c, interpret=True), repeats=3
+    )
+    err = float(jnp.max(jnp.abs(out_k - jit_ref(z, a, mask, c))))
+    emit("kernel.proj.pallas_interpret", us_k, f"max_err_vs_ref={err:.2e}")
+
+    # paper Algorithm 1 (sort + set iteration), single-threaded numpy
+    zs, as_, cs = np.asarray(z), np.asarray(a), np.asarray(c)
+    t0 = time.time()
+    for i in range(min(N, 64)):
+        projection.project_alg1_np(zs[i], as_[i], float(cs[i]))
+    us_alg1 = (time.time() - t0) / min(N, 64) * 1e6
+    emit("kernel.proj.paper_alg1_per_cell", us_alg1, "sort+loop, 1 cell")
+
+    # fused OGA step vs unfused pipeline (flop-identical, 1/3 HBM traffic)
+    from repro.kernels.oga_step import oga_step_fused
+
+    x = (jax.random.uniform(kz, (N, L)) < 0.7).astype(jnp.float32)
+    kstar = (jax.random.uniform(ka, (N, L)) < 0.2).astype(jnp.float32)
+    scal = jnp.stack(
+        [jnp.full((N,), 1.2), jnp.full((N,), 0.4), c,
+         jnp.asarray(np.arange(N) % 4, jnp.float32), jnp.full((N,), 0.5)],
+        axis=1,
+    )
+    jit_unfused = jax.jit(ref.oga_step_ref)
+    jit_unfused(z, a, mask, x, kstar, scal).block_until_ready()
+    _, us_u = timed(jit_unfused, z, a, mask, x, kstar, scal, repeats=20)
+    emit("kernel.oga_step.unfused_jnp", us_u, "grad+axpy+proj (3 HBM passes)")
+    out_f = oga_step_fused(z, a, mask, x, kstar, scal, interpret=True)
+    errf = float(jnp.max(jnp.abs(out_f - jit_unfused(z, a, mask, x, kstar, scal))))
+    emit("kernel.oga_step.fused_pallas", 0.0, f"max_err={errf:.2e};1 HBM pass")
+
+    # flash attention vs blockwise jnp
+    from repro.kernels.flash_attention import flash_attention
+
+    B, S, H, G, hd = 1, 256, 4, 2, 64
+    q = jax.random.normal(kz, (B, S, H, hd))
+    k = jax.random.normal(ka, (B, S, G, hd))
+    v = jax.random.normal(kc, (B, S, G, hd))
+    jit_attn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    jit_attn(q, k, v).block_until_ready()
+    _, us_a = timed(jit_attn, q, k, v, repeats=10)
+    emit("kernel.attn.blockwise_jnp", us_a, f"S={S};GQA {H}/{G}")
+    out_fa = flash_attention(q, k, v, interpret=True)
+    erra = float(jnp.max(jnp.abs(out_fa - jit_attn(q, k, v))))
+    emit("kernel.attn.flash_pallas", 0.0, f"max_err={erra:.2e}")
+
+
+if __name__ == "__main__":
+    run()

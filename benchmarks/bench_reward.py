@@ -1,0 +1,42 @@
+"""Paper Fig. 2: average/cumulative rewards, OGASCHED vs 4 baselines, and the
+ratio curves. Paper-default setup (Tab. 2): L=10, R=128, K=6, rho=0.7,
+contention 10; T configurable (paper uses 8000 for Fig. 2, 2000 elsewhere).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.sched import trace
+from repro.sched.simulator import improvement_over_baselines, run_all
+
+PAPER_GAPS = {"drf": 11.33, "fairness": 7.75, "binpacking": 13.89, "spreading": 13.44}
+
+
+def run(T: int = 2000, R: int = 128):
+    cfg = trace.TraceConfig(T=T, L=10, R=R, K=6, seed=1, contention=10.0)
+    results = run_all(cfg)
+    oga = results["ogasched"]
+    emit(
+        "fig2.avg_reward.ogasched",
+        oga.wall_s * 1e6 / T,
+        f"avg={oga.avg_reward:.2f}",
+    )
+    gaps = improvement_over_baselines(results)
+    for name, r in results.items():
+        if name == "ogasched":
+            continue
+        emit(
+            f"fig2.avg_reward.{name}",
+            r.wall_s * 1e6 / T,
+            f"avg={r.avg_reward:.2f};oga_gain={gaps[name]:+.2f}%;paper={PAPER_GAPS[name]:+.2f}%",
+        )
+    # learning curve shape: late avg must exceed early avg (Fig. 2a)
+    rw = results["ogasched"].rewards
+    early, late = rw[: T // 8].mean(), rw[-T // 8 :].mean()
+    emit("fig2.learning_curve", 0.0, f"early={early:.1f};late={late:.1f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Emit the §Roofline table from the dry-run artifacts (analysis/roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+
+from benchmarks.common import emit
+
+
+def run(art_dir: str = "artifacts/dryrun"):
+    for p in sorted(glob.glob(f"{art_dir}/*.json")):
+        r = json.load(open(p))
+        tag = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
+        if r["status"] == "skipped":
+            emit(tag, 0.0, "skipped:" + r["reason"][:60])
+            continue
+        if r["status"] != "ok":
+            emit(tag, 0.0, "ERROR")
+            continue
+        rl = r["roofline"]
+        ratio = r.get("model_flops", 0) / max(rl["hlo_flops_global"], 1)
+        emit(
+            tag,
+            rl["t_compute_s"] * 1e6,
+            f"dom={rl['dominant']};t_comp={rl['t_compute_s']:.4f}s;"
+            f"t_mem={rl['t_memory_s']:.4f}s;t_coll={rl['t_collective_s']:.4f}s;"
+            f"useful_flops={ratio:.2f};"
+            f"tempGB={r['memory'].get('temp_size_in_bytes', 0) / 1e9:.1f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

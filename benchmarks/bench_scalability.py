@@ -1,0 +1,32 @@
+"""Paper Fig. 3: scalability over |R|, |L| and contention level."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.sched import trace
+from repro.sched.simulator import improvement_over_baselines, run_all
+
+
+def run(quick: bool = True):
+    T = 400 if quick else 2000
+    for R in (32, 64, 128) if quick else (64, 128, 256, 512):
+        cfg = trace.TraceConfig(T=T, L=10, R=R, K=6, seed=3, contention=10.0)
+        res = run_all(cfg, algorithms=("ogasched", "fairness"))
+        ratio = res["ogasched"].avg_reward / res["fairness"].avg_reward
+        emit(f"fig3a.R={R}", res["ogasched"].wall_s * 1e6 / T,
+             f"oga={res['ogasched'].avg_reward:.1f};ratio_vs_fairness={ratio:.3f}")
+    for L in (5, 10, 20) if quick else (5, 10, 20, 50):
+        cfg = trace.TraceConfig(T=T, L=L, R=64, K=6, seed=3, contention=10.0)
+        res = run_all(cfg, algorithms=("ogasched", "fairness"))
+        ratio = res["ogasched"].avg_reward / res["fairness"].avg_reward
+        emit(f"fig3b.L={L}", res["ogasched"].wall_s * 1e6 / T,
+             f"oga={res['ogasched'].avg_reward:.1f};ratio_vs_fairness={ratio:.3f}")
+    for cont in (0.1, 1.0, 10.0, 50.0):
+        cfg = trace.TraceConfig(T=T, L=10, R=64, K=6, seed=3, contention=cont)
+        res = run_all(cfg)
+        gaps = improvement_over_baselines(res)
+        emit(f"fig3c.contention={cont}", 0.0,
+             f"oga={res['ogasched'].avg_reward:.1f};min_gap={min(gaps.values()):+.2f}%")
+
+
+if __name__ == "__main__":
+    run()

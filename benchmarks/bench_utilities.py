@@ -1,0 +1,26 @@
+"""Paper Fig. 7: cumulative rewards per utility family (linear > poly > log
+> reciprocal due to diminishing marginal effect), superiority preserved."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.sched import trace
+from repro.sched.simulator import improvement_over_baselines, run_all
+
+
+def run(quick: bool = True):
+    T = 400 if quick else 2000
+    for util in ("linear", "poly", "log", "reciprocal"):
+        cfg = trace.TraceConfig(
+            T=T, L=8, R=32, K=6, seed=6, contention=10.0, utility=util
+        )
+        res = run_all(cfg)
+        gaps = improvement_over_baselines(res)
+        emit(
+            f"fig7.utility={util}",
+            0.0,
+            f"oga_cum={res['ogasched'].cumulative:.0f};min_gap={min(gaps.values()):+.2f}%",
+        )
+
+
+if __name__ == "__main__":
+    run()

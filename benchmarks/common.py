@@ -1,0 +1,22 @@
+"""Shared benchmark helpers: CSV emission per the harness contract."""
+from __future__ import annotations
+
+import time
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.time()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    import jax
+
+    jax.block_until_ready(out) if out is not None else None
+    return out, (time.time() - t0) / repeats * 1e6  # us

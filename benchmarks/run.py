@@ -1,0 +1,54 @@
+"""Benchmark driver — one section per paper table/figure + kernels +
+roofline. Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common).
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale settings")
+    ap.add_argument("--only", type=str, default="")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from benchmarks import (
+        bench_contention,
+        bench_generality,
+        bench_hparams,
+        bench_kernels,
+        bench_large_scale,
+        bench_regret,
+        bench_reward,
+        bench_roofline,
+        bench_scalability,
+        bench_utilities,
+    )
+
+    sections = [
+        ("fig2_reward", lambda: bench_reward.run(T=1000 if quick else 8000)),
+        ("tab3_generality", lambda: bench_generality.run(quick)),
+        ("fig3_scalability", lambda: bench_scalability.run(quick)),
+        ("fig4_hparams", lambda: bench_hparams.run(quick)),
+        ("fig5_large_scale", lambda: bench_large_scale.run(quick)),
+        ("fig6_contention", lambda: bench_contention.run(quick)),
+        ("fig7_utilities", lambda: bench_utilities.run(quick)),
+        ("thm1_regret", lambda: bench_regret.run(quick)),
+        ("kernels", lambda: bench_kernels.run(quick)),
+        ("roofline", bench_roofline.run),
+    ]
+    for name, fn in sections:
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---")
+        t0 = time.time()
+        fn()
+        print(f"# {name} done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

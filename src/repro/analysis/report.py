@@ -1,0 +1,92 @@
+"""Generate the §Roofline markdown table from dry-run artifacts.
+
+    PYTHONPATH=src python -m repro.analysis.report [--out artifacts/roofline_table.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+from repro.analysis.roofline import PEAK_FLOPS
+
+IMPROVE = {
+    ("compute", "train"): "cut remat recompute (dots policy) / raise per-chip batch",
+    ("compute", "prefill"): "flash-attention kernel tiling (q-block skip on windows)",
+    ("compute", "decode"): "batch more sequences per step",
+    ("memory", "decode"): "KV-cache quantisation (int8) halves cache streaming",
+    ("memory", "train"): "chunked CE + SP carry already applied; microbatch next",
+    ("memory", "prefill"): "emit cache in bf16 blocks, fuse norm+matmul",
+    ("memory", "sched"): "fused OGA kernel (1 HBM pass, measured 1.51x)",
+    ("collective", "train"): "pure-DP plan for small archs; head-parallel attention; overlap FSDP gathers",
+    ("collective", "prefill"): "head-parallel attention (one seq AG per layer)",
+    ("collective", "decode"): "shard KV heads not seq; batch over both axes",
+}
+
+
+def load(art_dir: str, mesh: str):
+    rows = []
+    for p in sorted(glob.glob(f"{art_dir}/*__{mesh}.json")):
+        rows.append(json.load(open(p)))
+    return rows
+
+
+def table(rows, n_chips: int) -> str:
+    out = [
+        "| arch / shape | dominant | t_compute s | t_memory s | t_collective s "
+        "| roofline frac | useful flops | temp GB/dev | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        tag = f"{r['arch']} / {r['shape']}"
+        if r.get("variant"):
+            tag += f" [{r['variant']}]"
+        if r["status"] == "skipped":
+            out.append(f"| {tag} | — | — | — | — | — | — | — | SKIP: {r['reason'][:70]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {tag} | ERROR | | | | | | | |")
+            continue
+        rl = r["roofline"]
+        t_dom = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
+        mf = r.get("model_flops", 0.0)
+        frac = mf / (n_chips * PEAK_FLOPS * t_dom) if t_dom > 0 else 0.0
+        useful = mf / max(rl["hlo_flops_global"], 1)
+        kind = r.get("kind", "train")
+        note = IMPROVE.get((rl["dominant"], kind), "")
+        out.append(
+            f"| {tag} | {rl['dominant']} | {rl['t_compute_s']:.4f} | "
+            f"{rl['t_memory_s']:.4f} | {rl['t_collective_s']:.4f} | "
+            f"{frac:.3f} | {useful:.2f} | "
+            f"{r['memory'].get('temp_size_in_bytes', 0)/1e9:.1f} | {note} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default="artifacts/dryrun")
+    ap.add_argument("--out", default="artifacts/roofline_table.md")
+    args = ap.parse_args()
+    doc = ["# Roofline table (from compiled dry-run artifacts)\n"]
+    for mesh, chips in (("16x16", 256), ("2x16x16", 512)):
+        rows = [r for r in load(args.art, mesh) if "variant" not in r]
+        doc.append(f"\n## mesh {mesh} ({chips} chips)\n")
+        doc.append(table(rows, chips))
+    variants = [
+        json.load(open(p))
+        for p in sorted(glob.glob(f"{args.art}/*__*__*__*.json"))
+    ]
+    variants = [v for v in variants if v.get("variant")]
+    if variants:
+        doc.append("\n## hillclimb variants (single-pod)\n")
+        doc.append(table(variants, 256))
+    text = "\n".join(doc)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(text[:2000])
+    print(f"... written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

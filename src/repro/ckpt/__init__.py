@@ -1,0 +1,3 @@
+"""Checkpointing substrate: atomic sharded save/restore + manager."""
+from repro.ckpt.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.ckpt.manager import CheckpointManager  # noqa: F401

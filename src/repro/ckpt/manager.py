@@ -1,0 +1,49 @@
+"""Checkpoint manager: rotation, corruption-tolerant auto-resume."""
+from __future__ import annotations
+
+import os
+from typing import Any, Optional
+
+from repro.ckpt import checkpoint as C
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, every: int = 50):
+        self.dir = directory
+        self.keep = keep
+        self.every = every
+        os.makedirs(directory, exist_ok=True)
+
+    def maybe_save(self, step: int, tree: Any) -> Optional[str]:
+        if step % self.every != 0:
+            return None
+        return self.save(step, tree)
+
+    def save(self, step: int, tree: Any) -> str:
+        p = C.save_checkpoint(self.dir, tree, step)
+        self._rotate()
+        return p
+
+    def _rotate(self):
+        steps = C.available_steps(self.dir)
+        for s in steps[: -self.keep]:
+            for suffix in (".npz", ".json"):
+                try:
+                    os.remove(os.path.join(self.dir, f"step_{s:08d}{suffix}"))
+                except OSError:
+                    pass
+
+    def latest_valid_step(self) -> Optional[int]:
+        """Newest checkpoint that passes the manifest checksum — torn writes
+        from a crashed/failed node are skipped (restart path)."""
+        for s in reversed(C.available_steps(self.dir)):
+            if C.verify_checkpoint(self.dir, s):
+                return s
+        return None
+
+    def restore(self, like: Any, shardings: Any = None):
+        """(step, tree) of the newest valid checkpoint, or (None, None)."""
+        s = self.latest_valid_step()
+        if s is None:
+            return None, None
+        return s, C.load_checkpoint(self.dir, s, like, shardings)

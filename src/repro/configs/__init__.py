@@ -1,0 +1,2 @@
+"""Assigned-architecture configs (public-literature specs) + shapes."""
+from repro.configs.base import ArchConfig, get, names, reduced  # noqa: F401

@@ -1,0 +1,50 @@
+"""Assigned input shapes (per-arch shape set) + applicability rules."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic decode state: SSM / hybrid only. Every other
+# assigned arch is full-attention (gemma2's alternating *global* layers keep
+# it quadratic-memory); skips recorded per the assignment (DESIGN.md §4).
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(runnable?, reason-if-skipped)."""
+    if shape.name == "long_500k" and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, (
+            f"{cfg.name} is full-attention; 500k-token dense KV decode is "
+            "excluded by the assignment (sub-quadratic archs only)"
+        )
+    return True, ""
+
+
+def cells(arch_names: list[str]):
+    """All 40 (arch x shape) cells with applicability."""
+    from repro.configs import base
+
+    out = []
+    for an in arch_names:
+        cfg = base.get(an)
+        for sh in SHAPES.values():
+            ok, reason = applicable(cfg, sh)
+            out.append((cfg, sh, ok, reason))
+    return out

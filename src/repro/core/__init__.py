@@ -1,0 +1,11 @@
+"""OGASCHED core: the paper's contribution as composable JAX modules."""
+from repro.core.graph import ClusterSpec, make_random_spec, feasible  # noqa: F401
+from repro.core import (  # noqa: F401
+    baselines,
+    extensions,
+    ogasched,
+    projection,
+    regret,
+    reward,
+    utilities,
+)

@@ -1,0 +1,121 @@
+"""Paper §3.4 (multiple arrivals per slot) and §3.5 (gang scheduling).
+
+Both reduce to the native OGASCHED machinery through *port expansion*:
+replicated virtual ports share the original port's channels and caps, and the
+arrival indicator of virtual port (l, j) is 1{j <= x_l(t)} (§3.4) or the
+task-component decomposition (§3.5). Gang scheduling's All-or-Nothing set is
+non-convex; per the paper we run (super)gradient ascent on the convex
+relaxation plus an explicit all-or-nothing repair, which keeps iterates
+feasible for the gang constraint (a practical instantiation of the sketched
+"subgradient + mirror ascent" route).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import projection, reward
+from repro.core.graph import ClusterSpec
+
+
+def expand_multi_arrival(
+    spec: ClusterSpec, arrivals: jax.Array, J: int
+) -> tuple[ClusterSpec, jax.Array]:
+    """§3.4: expand to L*J virtual ports; x_{(l,j)}(t) = 1{j <= x_l(t)}.
+
+    Args:
+      arrivals: (T, L) integer counts.
+      J: max jobs per port per slot (J_l = max_t x_l(t), uniform bound).
+    """
+    L = spec.L
+    mask = jnp.repeat(spec.mask, J, axis=0)     # (L*J, R)
+    a = jnp.repeat(spec.a, J, axis=0)           # (L*J, K)
+    new_spec = dataclasses.replace(spec, mask=mask, a=a)
+    j_idx = jnp.tile(jnp.arange(1, J + 1), L)   # (L*J,)
+    x_rep = jnp.repeat(arrivals, J, axis=1)     # (T, L*J)
+    x_exp = (j_idx[None, :] <= x_rep).astype(spec.a.dtype)
+    return new_spec, x_exp
+
+
+def expand_gang(
+    spec: ClusterSpec, task_requests: np.ndarray
+) -> tuple[ClusterSpec, jax.Array, jax.Array]:
+    """§3.5: expand each port into its task components.
+
+    Args:
+      task_requests: (L, Q, K) per-task requests a_l^{q,k} (Q tasks per type;
+        zero rows mark absent tasks).
+    Returns (expanded_spec, port_of_task (L*Q,), task_valid (L*Q,)).
+    """
+    L, Q, K = task_requests.shape
+    assert K == spec.K and L == spec.L
+    a = jnp.asarray(task_requests.reshape(L * Q, K), spec.a.dtype)
+    mask = jnp.repeat(spec.mask, Q, axis=0)
+    valid = (jnp.sum(a, axis=1) > 0).astype(spec.a.dtype)
+    mask = mask * valid[:, None]
+    new_spec = dataclasses.replace(spec, mask=mask, a=a)
+    port_of_task = jnp.repeat(jnp.arange(L), Q)
+    return new_spec, port_of_task, valid
+
+
+def gang_repair(
+    expanded: ClusterSpec,
+    y: jax.Array,
+    port_of_task: jax.Array,
+    m_min: jax.Array,
+    L: int,
+    eps: float = 1e-6,
+) -> jax.Array:
+    """All-or-Nothing repair: a task is 'scheduled' if it received any
+    allocation; jobs with fewer than m_l scheduled tasks are zeroed."""
+    alloc = jnp.sum(y, axis=(1, 2))  # (L*Q,)
+    scheduled = (alloc > eps).astype(y.dtype)
+    n_sched = jax.ops.segment_sum(scheduled, port_of_task, num_segments=L)
+    keep_port = (n_sched >= m_min).astype(y.dtype)  # (L,)
+    keep = keep_port[port_of_task]  # (L*Q,)
+    return y * keep[:, None, None]
+
+
+def gang_reward(
+    expanded: ClusterSpec,
+    x: jax.Array,
+    y: jax.Array,
+    port_of_task: jax.Array,
+    L: int,
+) -> jax.Array:
+    """Gang port reward (§3.5): utilities over the *pooled* task allocation."""
+    m = expanded.mask[:, :, None]
+    ym = y * m
+    # pool tasks of the same job type: sum over q
+    pooled = jax.ops.segment_sum(ym, port_of_task, num_segments=L)  # (L,R,K)
+    from repro.core import utilities as U
+
+    gain = jnp.sum(
+        U.util_value(expanded.kinds, expanded.alpha[None], pooled), axis=(1, 2)
+    )
+    s = jnp.sum(pooled, axis=1)
+    penalty = jnp.max(expanded.beta[None, :] * s, axis=1)
+    return jnp.sum(x.astype(y.dtype) * (gain - penalty))
+
+
+def gang_oga_step(
+    expanded: ClusterSpec,
+    x_ports: jax.Array,
+    y: jax.Array,
+    eta: jax.Array,
+    port_of_task: jax.Array,
+    m_min: jax.Array,
+    L: int,
+) -> tuple[jax.Array, jax.Array]:
+    """One gang OGA step: supergradient ascent on the relaxation, projection
+    onto the convex part of Y, then All-or-Nothing repair."""
+    q_t = gang_reward(expanded, x_ports, y, port_of_task, L)
+    x_tasks = x_ports[port_of_task]
+    g = reward.reward_grad(expanded, x_tasks, y)
+    z = y + eta * g
+    y_next = projection.project(expanded, z)
+    y_next = gang_repair(expanded, y_next, port_of_task, m_min, L)
+    return y_next, q_t

@@ -1,0 +1,137 @@
+"""Bipartite scheduling graph model (paper §2.1).
+
+G = (L, R, E): ports (job types) x computing instances, K resource types.
+Dense tensor layout: decisions ``y`` are (L, R, K) float arrays with an
+adjacency mask (L, R); entries off the mask are structurally zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import utilities
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Static description of the bipartite scheduling problem.
+
+    Attributes:
+      mask:  (L, R) float {0,1} adjacency; mask[l, r] = 1 iff (l, r) in E.
+      a:     (L, K) per-channel request caps a_l^k            (eq. 5).
+      c:     (R, K) per-instance capacities c_r^k             (eq. 6).
+      alpha: (R, K) utility coefficients of f_r^k             (eq. 51).
+      beta:  (K,)   communication-overhead coefficients       (eq. 7).
+      kinds: (K,)   int32 utility family per resource type    (eq. 51).
+    """
+
+    mask: jax.Array
+    a: jax.Array
+    c: jax.Array
+    alpha: jax.Array
+    beta: jax.Array
+    kinds: jax.Array
+
+    @property
+    def L(self) -> int:  # noqa: N802
+        return self.mask.shape[0]
+
+    @property
+    def R(self) -> int:  # noqa: N802
+        return self.mask.shape[1]
+
+    @property
+    def K(self) -> int:  # noqa: N802
+        return self.a.shape[1]
+
+    def degree_r(self) -> jax.Array:
+        """|L_r| per instance (in-degree of right vertices)."""
+        return jnp.sum(self.mask, axis=0)
+
+    def degree_l(self) -> jax.Array:
+        """|R_l| per port."""
+        return jnp.sum(self.mask, axis=1)
+
+    def graph_density(self) -> jax.Array:
+        """sum_r |L_r| / |R| (paper §4.2 'graph dense')."""
+        return jnp.sum(self.mask) / self.R
+
+    def validate(self) -> None:
+        assert self.mask.shape == (self.L, self.R)
+        assert self.a.shape == (self.L, self.K)
+        assert self.c.shape == (self.R, self.K)
+        assert self.alpha.shape == (self.R, self.K)
+        assert self.beta.shape == (self.K,)
+        assert self.kinds.shape == (self.K,)
+
+
+def feasible(spec: ClusterSpec, y: jax.Array, tol: float = 1e-4) -> jax.Array:
+    """Check y in Y: (5) channel caps, (6) capacities, adjacency."""
+    m = spec.mask[:, :, None]
+    ok_box = jnp.all((y >= -tol) & (y <= spec.a[:, None, :] + tol))
+    ok_mask = jnp.all(jnp.abs(y * (1.0 - m)) <= tol)
+    used = jnp.sum(y * m, axis=0)  # (R, K)
+    ok_cap = jnp.all(used <= spec.c + tol)
+    return ok_box & ok_mask & ok_cap
+
+
+def zeros_like_decision(spec: ClusterSpec) -> jax.Array:
+    return jnp.zeros((spec.L, spec.R, spec.K), dtype=spec.a.dtype)
+
+
+def random_feasible_decision(spec: ClusterSpec, key: jax.Array) -> jax.Array:
+    """A strictly feasible y(1) in Y for OGA initialisation."""
+    u = jax.random.uniform(key, (spec.L, spec.R, spec.K), dtype=spec.a.dtype)
+    y = u * spec.a[:, None, :] * spec.mask[:, :, None]
+    # scale down columns that exceed capacity
+    used = jnp.sum(y, axis=0)  # (R, K)
+    scale = jnp.minimum(1.0, spec.c / jnp.maximum(used, 1e-9))
+    return y * scale[None, :, :]
+
+
+def make_random_spec(
+    key: jax.Array,
+    L: int = 10,
+    R: int = 128,
+    K: int = 6,
+    density: float = 0.5,
+    contention: float = 10.0,
+    alpha_range: tuple[float, float] = (1.0, 1.5),
+    beta_range: tuple[float, float] = (0.3, 0.5),
+    kinds: Optional[np.ndarray] = None,
+    dtype=jnp.float32,
+) -> ClusterSpec:
+    """Random spec following the paper's default parameterisation (Tab. 2).
+
+    ``contention`` multiplies job resource requirements (paper §4, Tab. 2);
+    larger values make capacity constraints bind more often.
+    """
+    k_mask, k_a, k_c, k_al = jax.random.split(key, 4)
+    mask = (jax.random.uniform(k_mask, (L, R)) < density).astype(dtype)
+    # every port needs >=1 instance and vice versa: force a diagonal-ish band
+    eye = jnp.zeros((L, R), dtype).at[jnp.arange(L), jnp.arange(L) % R].set(1.0)
+    mask = jnp.maximum(mask, eye)
+    mask = jnp.maximum(mask, eye.at[:, :].get())  # no-op, keeps dtype
+    # capacities: heterogeneous instances, c_r^k in [20, 100]
+    c = jax.random.uniform(k_c, (R, K), minval=20.0, maxval=100.0, dtype=dtype)
+    # requests: a_l^k in [0.5, 2.0] * contention
+    a = jax.random.uniform(k_a, (L, K), minval=0.5, maxval=2.0, dtype=dtype)
+    a = a * contention
+    alpha = jax.random.uniform(
+        k_al, (R, K), minval=alpha_range[0], maxval=alpha_range[1], dtype=dtype
+    )
+    beta = jnp.linspace(beta_range[0], beta_range[1], K, dtype=dtype)
+    if kinds is None:
+        kinds_arr = jnp.asarray(
+            [i % utilities.NUM_KINDS for i in range(K)], dtype=jnp.int32
+        )
+    else:
+        kinds_arr = jnp.asarray(kinds, dtype=jnp.int32)
+    spec = ClusterSpec(mask=mask, a=a, c=c, alpha=alpha, beta=beta, kinds=kinds_arr)
+    spec.validate()
+    return spec

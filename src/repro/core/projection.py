@@ -1,0 +1,183 @@
+"""Euclidean projection onto Y (paper eq. 32, Alg. 1 fast projection).
+
+The projection decomposes independently per (instance r, resource k): project
+z_{(:,r)}^k onto the box-capped simplex
+
+    { yhat : 0 <= yhat_l <= a_l^k  (l in L_r),  sum_l yhat_l <= c_r^k }.
+
+Water-filling form: yhat_l = clip(z_l - tau, 0, a_l) with tau = 0 when
+sum_l clip(z_l, 0, a_l) <= c, otherwise tau > 0 solving
+g(tau) = sum_l clip(z_l - tau, 0, a_l) = c  (tau = rho_r^k / 2 in eq. 34-35).
+
+Three implementations:
+  * ``project_bisection`` — branch-free fixed-iteration bisection on tau,
+    vectorised over all (r, k); the TPU-native adaptation (see DESIGN.md §3)
+    and the oracle for kernels/proj_bisect.
+  * ``project_exact_np``  — exact breakpoint sweep (numpy), test oracle.
+  * ``project_alg1_np``   — the paper's Algorithm 1 verbatim (sort + B1/B2/B3
+    set iteration), used in tests to certify equivalence.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import ClusterSpec
+
+_NEG = -1e30
+
+
+def project_bisection(
+    z: jax.Array,
+    a: jax.Array,
+    c: jax.Array,
+    mask: jax.Array,
+    iters: int = 64,
+) -> jax.Array:
+    """Vectorised projection of z (L,R,K) onto Y.
+
+    Args:
+      z: (L, R, K) pre-projection point (may violate all constraints).
+      a: (L, K) per-channel caps; c: (R, K) capacities; mask: (L, R).
+      iters: bisection iterations (64 reaches f32 machine precision since the
+        interval halves every step; see tests/test_projection.py).
+    """
+    m = mask[:, :, None]
+    box = jnp.clip(z, 0.0, a[:, None, :]) * m  # tau = 0 candidate
+    need = jnp.sum(box, axis=0) > c  # (R, K) capacity binding?
+
+    # tau in [0, max_l z_l]: g is non-increasing, g(0) >= c on `need` cells.
+    hi = jnp.max(jnp.where(m > 0, z, _NEG), axis=0)  # (R, K)
+    hi = jnp.maximum(hi, 0.0)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, loh):
+        lo, hi = loh
+        mid = 0.5 * (lo + hi)
+        g = jnp.sum(jnp.clip(z - mid[None, :, :], 0.0, a[:, None, :]) * m, axis=0)
+        too_big = g > c
+        return jnp.where(too_big, mid, lo), jnp.where(too_big, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    tau = 0.5 * (lo + hi)
+    proj = jnp.clip(z - tau[None, :, :], 0.0, a[:, None, :]) * m
+    return jnp.where(need[None, :, :], proj, box)
+
+
+def project_exact_np(z: np.ndarray, a: np.ndarray, c: float) -> np.ndarray:
+    """Exact 1-cell projection via breakpoint sweep. z, a: (L,); c scalar."""
+    z = np.asarray(z, np.float64)
+    a = np.asarray(a, np.float64)
+    box = np.clip(z, 0.0, a)
+    if box.sum() <= c + 1e-12:
+        return box
+    # g(tau) = sum clip(z - tau, 0, a) is piecewise linear with breakpoints
+    # at z_l (entry leaves 0-clamp) and z_l - a_l (entry leaves a-clamp).
+    bps = np.unique(np.concatenate([z, z - a, [0.0]]))
+    bps = bps[bps >= 0.0]
+    g = lambda tau: np.clip(z - tau, 0.0, a).sum()
+    vals = np.array([g(t) for t in bps])
+    # find bracketing breakpoints: g decreasing in tau; want g(tau) = c
+    idx = np.searchsorted(-vals, -c)  # vals descending
+    if idx == 0:
+        lo_t, hi_t = 0.0, bps[0]
+        lo_v, hi_v = g(0.0), vals[0]
+    elif idx >= len(bps):
+        lo_t = bps[-1]
+        lo_v = vals[-1]
+        hi_t, hi_v = lo_t + a.max() + 1.0, g(lo_t + a.max() + 1.0)
+    else:
+        lo_t, hi_t = bps[idx - 1], bps[idx]
+        lo_v, hi_v = vals[idx - 1], vals[idx]
+    if abs(hi_v - lo_v) < 1e-15:
+        tau = lo_t
+    else:  # linear interpolation on the segment (g is linear there)
+        tau = lo_t + (lo_v - c) * (hi_t - lo_t) / (lo_v - hi_v)
+    return np.clip(z - tau, 0.0, a)
+
+
+def project_alg1_np(z: np.ndarray, a: np.ndarray, c: float) -> np.ndarray:
+    """Paper Algorithm 1 (steps 7-30) for one (r, k) cell, verbatim.
+
+    Sorts z descending, iterates the B1 (at cap) / B2 (at zero) / B3 (interior)
+    partition with rho from eq. 35 until no illegal allocations remain.
+    """
+    z = np.asarray(z, np.float64)
+    a = np.asarray(a, np.float64)
+    n = len(z)
+    order = np.argsort(-z)  # step 7: sort descending
+    zs, as_ = z[order], a[order]
+    b1: set[int] = set()
+    yhat = np.zeros(n)
+    outer = 0
+    while True:  # outer while (step 9): one cap moves to B1 per pass
+        outer += 1
+        if outer > n + 2:
+            raise RuntimeError("Alg1 failed to converge")
+        # steps 10-13: B2 resets to empty, B3 to the non-capped ports
+        b2: set[int] = set()
+        b3 = set(range(n)) - b1
+        while True:  # inner repeat (steps 18-30)
+            if b3:
+                rho = (
+                    2.0
+                    * (sum(zs[i] for i in b3) - c + sum(as_[i] for i in b1))
+                    / len(b3)
+                )  # eq. 35
+                rho = max(rho, 0.0)
+            else:
+                rho = 0.0
+            s_rk: set[int] = set()
+            for i in range(n):  # step 21
+                if i in b1:
+                    yhat[i] = as_[i]
+                elif i in b2:
+                    yhat[i] = 0.0
+                elif i in b3:
+                    yhat[i] = zs[i] - rho / 2.0
+                    if yhat[i] < 0.0:
+                        # z sorted => all later interior ports also illegal
+                        s_rk = {j for j in range(i, n) if j in b3}
+                        break
+            if not s_rk:
+                break
+            for j in s_rk:  # step 29: B2 <- B2 u S, B3 <- B3 \ S
+                yhat[j] = 0.0
+            b2 |= s_rk
+            b3 -= s_rk
+        # step 15: does the largest interior entry exceed its cap? The paper
+        # checks l=1 only (uniform caps); we take the first violating port,
+        # one per outer pass, which reduces to the paper's rule when caps are
+        # uniform and generalises it otherwise.
+        viol = [i for i in sorted(b3) if yhat[i] > as_[i] + 1e-12]
+        if not viol:
+            break
+        b1.add(viol[0])  # step 16
+    out = np.zeros(n)
+    out[order] = np.clip(yhat, 0.0, as_)
+    return out
+
+
+def project_cluster_np(
+    spec: ClusterSpec, z: np.ndarray, method: str = "exact"
+) -> np.ndarray:
+    """Reference full projection: loops the per-(r,k) oracle over cells."""
+    z = np.asarray(z, np.float64)
+    mask = np.asarray(spec.mask)
+    a = np.asarray(spec.a)
+    c = np.asarray(spec.c)
+    fn = project_exact_np if method == "exact" else project_alg1_np
+    out = np.zeros_like(z)
+    for r in range(spec.R):
+        ports = np.nonzero(mask[:, r])[0]
+        if len(ports) == 0:
+            continue
+        for k in range(spec.K):
+            out[ports, r, k] = fn(z[ports, r, k], a[ports, k], float(c[r, k]))
+    return out
+
+
+def project(spec: ClusterSpec, z: jax.Array, iters: int = 64) -> jax.Array:
+    """Pi_Y(z) (eq. 32) — production path."""
+    return project_bisection(z, spec.a, spec.c, spec.mask, iters=iters)

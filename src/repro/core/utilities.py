@@ -1,0 +1,67 @@
+"""Concave utility families f_r^k (paper eq. 51) and derivatives.
+
+All are zero-startup (f(0)=0), non-decreasing, concave on R_{>=0}, and
+continuously differentiable with f'(0) <= varpi_r^k  (Def. 1, "nice setup").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+UTIL_LINEAR = 0
+UTIL_LOG = 1
+UTIL_RECIPROCAL = 2
+UTIL_POLY = 3
+NUM_KINDS = 4
+
+KIND_NAMES = {
+    UTIL_LINEAR: "linear",
+    UTIL_LOG: "log",
+    UTIL_RECIPROCAL: "reciprocal",
+    UTIL_POLY: "poly",
+}
+NAME_TO_KIND = {v: k for k, v in KIND_NAMES.items()}
+
+
+def util_value(kinds: jax.Array, alpha: jax.Array, y: jax.Array) -> jax.Array:
+    """f_r^k(y) (eq. 51). kinds broadcasts along the trailing K axis of y."""
+    y = jnp.maximum(y, 0.0)
+    branches = [
+        alpha * y,                                   # linear
+        alpha * jnp.log1p(y),                        # log
+        1.0 / alpha - 1.0 / (y + alpha),             # reciprocal
+        alpha * jnp.sqrt(y + 1.0) - alpha,           # poly
+    ]
+    out = jnp.zeros_like(y * alpha)
+    for kind, b in enumerate(branches):
+        out = jnp.where(kinds == kind, b, out)
+    return out
+
+
+def util_grad(kinds: jax.Array, alpha: jax.Array, y: jax.Array) -> jax.Array:
+    """(f_r^k)'(y)."""
+    y = jnp.maximum(y, 0.0)
+    branches = [
+        jnp.broadcast_to(alpha, jnp.broadcast_shapes(y.shape, alpha.shape)),
+        alpha / (1.0 + y),
+        1.0 / jnp.square(y + alpha),
+        alpha / (2.0 * jnp.sqrt(y + 1.0)),
+    ]
+    out = jnp.zeros(jnp.broadcast_shapes(y.shape, alpha.shape), y.dtype)
+    for kind, b in enumerate(branches):
+        out = jnp.where(kinds == kind, b, out)
+    return out
+
+
+def util_grad_at_zero(kinds: jax.Array, alpha: jax.Array) -> jax.Array:
+    """varpi_r^k = (f_r^k)'(0) bound used by Thm. 1 (eq. 13)."""
+    branches = [
+        alpha,
+        alpha,
+        1.0 / jnp.square(alpha),
+        alpha / 2.0,
+    ]
+    out = jnp.zeros_like(alpha)
+    for kind, b in enumerate(branches):
+        out = jnp.where(kinds == kind, b, out)
+    return out

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: causal GQA flash attention (window + softcap).
+
+Online-softmax over kv blocks with MXU-aligned (128, head_dim) tiles; grid =
+(batch, q_head, q_block). GQA maps q-head h to kv-head h // (H // G) in the
+BlockSpec index_map — no KV replication in HBM. Sliding windows (gemma2,
+hymba) skip fully-masked kv blocks via masking (flop skip is an XLA-level
+win recorded separately); logit softcap is fused before masking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bk, S, window, softcap, scale):
+    iq = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, hd)
+    qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    nk = S // bk
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[0, 0, pl.ds(j * bk, bk), :].astype(jnp.float32)  # (bk, hd)
+        v = v_ref[0, 0, pl.ds(j * bk, bk), :].astype(jnp.float32)
+        s = q @ k.T  # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        mask = kpos <= qpos  # causal
+        if window is not None:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_cur = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc * alpha + p @ v
+        return acc, m_cur, l_cur
+
+    hd = q_ref.shape[-1]
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m0 = jnp.full((bq, 1), NEG, jnp.float32)
+    l0 = jnp.zeros((bq, 1), jnp.float32)
+    # causal: kv blocks beyond this q block never contribute
+    nk_needed = jnp.minimum(nk, ((iq + 1) * bq + bk - 1) // bk)
+    acc, m, l = jax.lax.fori_loop(0, nk_needed, body, (acc0, m0, l0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    window: int | None = None,
+    softcap: float | None = None,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+):
+    """Causal GQA flash attention.
+
+    q: (B, S, H, hd); k, v: (B, S, G, hd) with H = G * rep. Returns (B, S,
+    H, hd). S must be divisible by bq and bk (shapes in this repo are).
+    """
+    B, S, H, hd = q.shape
+    G = k.shape[2]
+    rep = H // G
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0
+
+    qt = q.transpose(0, 2, 1, 3)  # (B, H, S, hd)
+    kt = k.transpose(0, 2, 1, 3)  # (B, G, S, hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (B, H, S // bq)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, bq=bq, bk=bk, S=S, window=window, softcap=softcap,
+            scale=hd**-0.5,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // rep, 0, 0)),
+            pl.BlockSpec((1, 1, S, hd), lambda b, h, i: (b, h // rep, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: fused OGA slot update (beyond-paper optimisation).
+
+Fuses reward gradient (eq. 30) + ascent + fast projection for a tile of
+(r, k) cells in one VMEM pass: y is read once and y(t+1) written once,
+instead of three HBM round-trips (grad kernel, axpy, projection). The OGA
+update is memory-bound (O(1) flops/byte), so fusion is the dominant lever —
+recorded in EXPERIMENTS.md §Perf (scheduler kernel iterations).
+
+Row layout: row n = cell (r, k) with L lanes (ports). Per-row scalars are
+packed as columns of ``scal`` = [alpha, beta_k, c, kind, eta].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.proj_bisect import ITERS, NEG, ROW_BLOCK
+
+
+def _util_grad(kind, alpha, y):
+    y = jnp.maximum(y, 0.0)  # utilities are defined on R_{>=0} (eq. 51)
+    g_lin = alpha
+    g_log = alpha / (1.0 + y)
+    g_rec = 1.0 / jnp.square(y + alpha)
+    g_pol = alpha / (2.0 * jnp.sqrt(y + 1.0))
+    g = jnp.where(kind == 0, g_lin, 0.0)
+    g = jnp.where(kind == 1, g_log, g)
+    g = jnp.where(kind == 2, g_rec, g)
+    return jnp.where(kind == 3, g_pol, g)
+
+
+def _kernel(y_ref, a_ref, mask_ref, x_ref, kstar_ref, scal_ref, out_ref):
+    y = y_ref[...].astype(jnp.float32)          # (Rb, L)
+    a = a_ref[...].astype(jnp.float32)
+    m = mask_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)          # (Rb, L) arrivals (bcast rows)
+    kst = kstar_ref[...].astype(jnp.float32)    # (Rb, L) 1{k = k*_l}
+    scal = scal_ref[...].astype(jnp.float32)    # (Rb, 128): packed scalars
+    alpha = scal[:, 0:1]
+    beta = scal[:, 1:2]
+    c = scal[:, 2:3]
+    kind = scal[:, 3:4]
+    eta = scal[:, 4:5]
+
+    # eq. 30 gradient, ascent step
+    g = _util_grad(kind, alpha, y * m) - beta * kst
+    z = y + eta * x * g * m
+
+    # fast projection (bisection water level)
+    box = jnp.clip(z, 0.0, a) * m
+    need = jnp.sum(box, axis=1, keepdims=True) > c
+    hi = jnp.maximum(jnp.max(jnp.where(m > 0, z, NEG), axis=1, keepdims=True), 0.0)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        gsum = jnp.sum(jnp.clip(z - mid, 0.0, a) * m, axis=1, keepdims=True)
+        too_big = gsum > c
+        return jnp.where(too_big, mid, lo), jnp.where(too_big, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, ITERS, body, (lo, hi))
+    tau = 0.5 * (lo + hi)
+    proj = jnp.clip(z - tau, 0.0, a) * m
+    out_ref[...] = jnp.where(need, proj, box).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def oga_step_fused(y, a, mask, x, kstar, scal, *, interpret: bool = False):
+    """Fused OGA slot update over (N=R*K, L) rows.
+
+    y, a, mask, x, kstar: (N, L). scal: (N, 5) = [alpha, beta, c, kind, eta].
+    Returns y(t+1) (N, L).
+    """
+    N, L = y.shape
+    pad_n = (-N) % ROW_BLOCK
+    pad_l = (-L) % 128
+    pad2 = lambda t: jnp.pad(t, ((0, pad_n), (0, pad_l)))
+    yp, ap, mp, xp, kp = map(pad2, (y, a, mask, x, kstar))
+    sp = jnp.pad(scal, ((0, pad_n), (0, 128 - scal.shape[1])))
+    Np, Lp = yp.shape
+    row_spec = pl.BlockSpec((ROW_BLOCK, Lp), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Np // ROW_BLOCK,),
+        in_specs=[row_spec] * 5 + [pl.BlockSpec((ROW_BLOCK, 128), lambda i: (i, 0))],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((Np, Lp), y.dtype),
+        interpret=interpret,
+    )(yp, ap, mp, xp, kp, sp)
+    return out[:N, :L]

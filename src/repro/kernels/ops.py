@@ -1,0 +1,37 @@
+"""Jit'd dispatch wrappers: Pallas on TPU, interpret-mode elsewhere, with the
+pure-jnp oracle available for A/B (config flag ``use_pallas_kernels``)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import oga_step as _og
+from repro.kernels import proj_bisect as _pb
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def proj_bisect(z, a, mask, c, *, use_pallas: bool | None = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _pb.proj_bisect(z, a, mask, c, interpret=not _on_tpu())
+    return _ref.proj_rows_ref(z, a, mask, c)
+
+
+def oga_step_fused(y, a, mask, x, kstar, scal, *, use_pallas: bool | None = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _og.oga_step_fused(y, a, mask, x, kstar, scal, interpret=not _on_tpu())
+    return _ref.oga_step_ref(y, a, mask, x, kstar, scal)
+
+
+def flash_attention(q, k, v, *, window=None, softcap=None, use_pallas=None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _fa.flash_attention(
+            q, k, v, window=window, softcap=softcap, interpret=not _on_tpu()
+        )
+    return _ref.flash_attention_ref(q, k, v, window=window, softcap=softcap)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import projection as _proj
+from repro.models import attention as _attn
+
+
+def proj_rows_ref(z, a, mask, c, iters: int = 64):
+    """Direct jnp bisection over rows — independent re-implementation."""
+    m = mask
+    box = jnp.clip(z, 0.0, a) * m
+    need = jnp.sum(box, axis=1) > c
+    hi = jnp.maximum(jnp.max(jnp.where(m > 0, z, -1e30), axis=1), 0.0)
+    lo = jnp.zeros_like(hi)
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = 0.5 * (lo + hi)
+        g = jnp.sum(jnp.clip(z - mid[:, None], 0.0, a) * m, axis=1)
+        big = g > c
+        return jnp.where(big, mid, lo), jnp.where(big, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    tau = 0.5 * (lo + hi)
+    proj = jnp.clip(z - tau[:, None], 0.0, a) * m
+    return jnp.where(need[:, None], proj, box)
+
+
+def proj_rows_exact_np(z, a, mask, c):
+    """Exact numpy oracle (breakpoint sweep) per row."""
+    import numpy as np
+
+    z, a, mask = np.asarray(z, np.float64), np.asarray(a, np.float64), np.asarray(mask)
+    out = np.zeros_like(z)
+    for i in range(z.shape[0]):
+        lanes = mask[i] > 0
+        if lanes.any():
+            out[i, lanes] = _proj.project_exact_np(
+                z[i, lanes], a[i, lanes], float(c[i])
+            )
+    return out
+
+
+def oga_step_ref(y, a, mask, x, kstar, scal):
+    """Unfused oracle: grad (eq. 30) -> ascent -> projection."""
+    from repro.core import utilities as U
+
+    alpha, beta, c, kind, eta = (scal[:, i] for i in range(5))
+    g = U.util_grad(kind[:, None].astype(jnp.int32), alpha[:, None], y * mask)
+    g = g - beta[:, None] * kstar
+    z = y + eta[:, None] * x * g * mask
+    return proj_rows_ref(z, a, mask, c)
+
+
+def flash_attention_ref(q, k, v, *, window=None, softcap=None):
+    """Blockwise jnp attention (models.attention) as the flash oracle."""
+    w = None if window is None else jnp.asarray(window, jnp.int32)
+    return _attn.attention(
+        q, k, v, causal=True, window=w, attn_softcap=softcap, q_block=128
+    )

@@ -1,0 +1,422 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh with ShapeDtypeStruct inputs (no allocation), and record
+memory/cost analysis + collective schedule for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-3b \
+      --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --sched   # scheduler cell
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import roofline as rl
+from repro.configs import base as configs
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim import AdamWConfig
+from repro.train import sharding as shd
+from repro.train import train_step as ts
+from repro.train.meshctx import use_mesh
+
+
+def _cost_of(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes accessed": float(cost.get("bytes accessed", 0.0)),
+        "collectives": rl.collective_bytes(compiled.as_text()),
+    }
+
+
+def _layer_cost(cfg, shape, mesh, kind: str, unroll: bool) -> dict:
+    """Compile ONE layer standalone on the production mesh.
+
+    XLA's HLO cost analysis counts while-loop bodies once (verified:
+    EXPERIMENTS.md §Dry-run methodology), so scanned-layer cells undercount
+    by ~n_layers. Corrected totals use:
+        total = full - layer(scanned-attn) + n_layers * layer(unrolled-attn)
+    where the unrolled variant also counts the q-block attention scan fully.
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.models import transformer as tf
+
+    cfg2 = dataclasses.replace(cfg, attn_unroll=unroll)
+    dt = jnp.dtype(cfg.compute_dtype)
+    B, S = shape.global_batch, shape.seq_len
+    lshapes = jax.eval_shape(
+        lambda: tf.init_block(jax.random.PRNGKey(0), cfg2, jnp.dtype(cfg.param_dtype))
+    )
+    l_sh = shd.shardings(shd.param_pspecs({"blocks": lshapes}, mesh), mesh)["blocks"]
+    if cfg.mrope_sections is not None:
+        pos = jax.ShapeDtypeStruct((B, S if kind != "decode" else 1, 3), jnp.int32)
+    else:
+        pos = jax.ShapeDtypeStruct((B, S if kind != "decode" else 1), jnp.int32)
+
+    if kind == "decode":
+        from repro.train.train_step import cache_len_for
+
+        clen = cache_len_for(cfg, shape)
+        cache = jax.eval_shape(lambda: tf.init_cache(cfg2, B, clen, dt))
+        cache1 = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), cache
+        )
+        c_sh = shd.shardings(
+            jax.tree.map(
+                lambda s: shd.auto_pspec(s.shape, mesh, batch_dim=0)
+                if len(s.shape) >= 3
+                else shd.auto_pspec(s.shape, mesh),
+                cache1,
+            ),
+            mesh,
+        )
+        x = jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt)
+        x_sh = shd.shardings(shd.auto_pspec(x.shape, mesh, batch_dim=0), mesh)
+
+        def f(p, xx, csl, pp):
+            out, newc = tf.block_decode(
+                p, cfg2, xx, csl, jnp.full((B,), clen - 1, jnp.int32), pp,
+                jnp.zeros((), jnp.int32),
+            )
+            return out, newc
+
+        compiled = (
+            jax.jit(f, in_shardings=(l_sh, x_sh, c_sh, None))
+            .lower(lshapes, x, cache1, pos)
+            .compile()
+        )
+        return _cost_of(compiled)
+
+    x = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+    x_sh = shd.shardings(
+        shd.auto_pspec(x.shape, mesh, batch_dim=0, skip_dims=(2,)), mesh
+    )
+    w = jnp.zeros((), jnp.int32)  # global window: flops are mask-independent
+
+    if kind == "train":
+
+        def f(p, xx, pp):
+            def blk(p2, x2):
+                out, _ = tf.block_forward(p2, cfg2, x2, pp, w)
+                return jnp.sum(out.astype(jnp.float32))
+
+            if cfg2.remat_policy == "dots":
+                blk = jax.checkpoint(
+                    blk,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                )
+            else:
+                blk = jax.checkpoint(blk)
+            return jax.value_and_grad(blk, argnums=(0, 1))(p, xx)
+
+    else:  # prefill
+
+        def f(p, xx, pp):
+            return tf.block_forward(p, cfg2, xx, pp, w, collect=True)
+
+    compiled = (
+        jax.jit(f, in_shardings=(l_sh, x_sh, None)).lower(lshapes, x, pos).compile()
+    )
+    return _cost_of(compiled)
+
+
+def _corrected(full: dict, lay_scan: dict, lay_unroll: dict, L: int) -> dict:
+    """total = full - layer(scanned) + L * layer(unrolled)."""
+    out = {
+        "flops": max(
+            full["flops"] - lay_scan["flops"] + L * lay_unroll["flops"], 0.0
+        ),
+        "bytes accessed": max(
+            full["bytes accessed"]
+            - lay_scan["bytes accessed"]
+            + L * lay_unroll["bytes accessed"],
+            0.0,
+        ),
+    }
+    colls: dict = {}
+    kinds = (
+        set(full["collectives"])
+        | set(lay_scan["collectives"])
+        | set(lay_unroll["collectives"])
+    )
+    for k in kinds:
+        fb = full["collectives"].get(k, {"bytes": 0, "count": 0})
+        sb = lay_scan["collectives"].get(k, {"bytes": 0, "count": 0})
+        ub = lay_unroll["collectives"].get(k, {"bytes": 0, "count": 0})
+        colls[k] = {
+            "bytes": max(fb["bytes"] - sb["bytes"] + L * ub["bytes"], 0),
+            "count": max(fb["count"] - sb["count"] + L * ub["count"], 0),
+        }
+    out["collectives"] = colls
+    return out
+
+
+def _mem_dict(mem) -> dict:
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    out = {}
+    for k in keys:
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def _parse_overrides(spec: str) -> dict:
+    """'pure_dp=1,logits_chunk=512,remat_policy=dots' -> typed dict."""
+    out = {}
+    if not spec:
+        return out
+    for kv in spec.split(","):
+        k, v = kv.split("=")
+        if v in ("0", "1", "true", "false", "True", "False"):
+            out[k] = v in ("1", "true", "True")
+        elif v.isdigit():
+            out[k] = int(v)
+        else:
+            out[k] = v
+    return out
+
+
+def run_cell(
+    arch: str, shape_name: str, multi_pod: bool, overrides: dict | None = None
+) -> dict:
+    import dataclasses
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    cfg = configs.get(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "n_devices": int(n_dev),
+        "kind": shape.kind,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    pshapes = M.param_shapes(cfg)
+    p_sh = shd.shardings(shd.param_pspecs(pshapes, mesh), mesh)
+    specs = ts.input_specs(cfg, shape)
+    opt = AdamWConfig(state_dtype="bfloat16")
+    t0 = time.time()
+    ctx = use_mesh(mesh)
+    ctx.__enter__()
+
+    if shape.kind == "train":
+        fn = ts.make_train_step(cfg, opt)
+        oshapes = ts.opt_specs(cfg, opt)
+        o_sh = {
+            "m": shd.shardings(shd.param_pspecs(pshapes, mesh), mesh),
+            "v": shd.shardings(shd.param_pspecs(pshapes, mesh), mesh),
+            "step": shd.shardings(P(), mesh),
+        }
+        b_sh = shd.shardings(
+            shd.batch_pspecs(specs["batch"], mesh, pure_dp=cfg.pure_dp), mesh
+        )
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(pshapes, oshapes, specs["batch"])
+    elif shape.kind == "prefill":
+        fn = ts.make_prefill_step(cfg)
+        b_sh = shd.shardings(
+            shd.batch_pspecs(specs["batch"], mesh, pure_dp=cfg.pure_dp), mesh
+        )
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+        lowered = jitted.lower(pshapes, specs["batch"])
+    else:  # decode
+        fn = ts.make_serve_step(cfg)
+        c_sh = shd.shardings(shd.cache_pspecs(specs["cache"], mesh), mesh)
+        tok_sh = shd.shardings(
+            shd.batch_pspecs({"t": specs["tokens"]}, mesh), mesh
+        )["t"]
+        jitted = jax.jit(
+            fn,
+            in_shardings=(p_sh, c_sh, tok_sh, None),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(pshapes, specs["cache"], specs["tokens"], specs["pos"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ctx.__exit__(None, None, None)
+
+    mem = compiled.memory_analysis()
+    print(f"[{arch} x {shape_name}] memory_analysis:", mem)
+    full = _cost_of(compiled)
+    print(
+        f"[{arch} x {shape_name}] raw cost: flops={full['flops']:.3e}"
+        f" bytes={full['bytes accessed']:.3e}"
+    )
+
+    # collectives: exact, while-trip-count-aware parse of the full module
+    coll_exact = rl.collective_bytes_exact(compiled.as_text())
+    # flops: scan bodies count once in cost_analysis -> one-layer probes
+    ctx2 = use_mesh(mesh)
+    ctx2.__enter__()
+    try:
+        lay_scan = _layer_cost(cfg, shape, mesh, shape.kind, unroll=False)
+        lay_unroll = _layer_cost(cfg, shape, mesh, shape.kind, unroll=True)
+        corr = _corrected(full, lay_scan, lay_unroll, cfg.n_layers)
+    finally:
+        ctx2.__exit__(None, None, None)
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory=_mem_dict(mem),
+        cost_raw={k: full[k] for k in ("flops", "bytes accessed")},
+        collectives_raw=full["collectives"],
+        cost={k: corr[k] for k in ("flops", "bytes accessed")},
+        collectives=coll_exact,
+        layer_cost={"scan": lay_scan, "unroll": lay_unroll},
+        model_flops=rl.model_flops(cfg, shape),
+        n_params=cfg.n_params,
+        n_active_params=cfg.n_active_params,
+    )
+    rec["roofline"] = rl.roofline(rec, n_dev)
+    return rec
+
+
+def run_sched_cell(multi_pod: bool) -> dict:
+    """Dry-run the paper's distributed scheduler step itself at cluster scale
+    (instances sharded over the whole mesh; one psum per step)."""
+    from repro.core import distributed
+    from repro.sched import trace
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    spec = trace.build_spec(
+        trace.TraceConfig(L=100, R=131072, K=6, seed=0, density=0.25)
+    )
+    # flatten mesh into one logical axis for instance sharding
+    import numpy as np
+    from jax.sharding import Mesh
+
+    flat = Mesh(mesh.devices.reshape(-1), ("data",))
+    step = distributed.make_distributed_step(spec, flat, axis="data")
+    import jax.numpy as jnp
+
+    y = jax.ShapeDtypeStruct((spec.L, spec.R, spec.K), jnp.float32)
+    x = jax.ShapeDtypeStruct((spec.L,), jnp.float32)
+    eta = jax.ShapeDtypeStruct((), jnp.float32)
+    sspec = jax.eval_shape(lambda: spec)
+    t0 = time.time()
+    lowered = jax.jit(step).lower(sspec, y, x, eta)
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    print("[sched] memory_analysis:", mem)
+    print("[sched] cost_analysis flops:", cost.get("flops", 0))
+    rec = {
+        "arch": "ogasched-distributed",
+        "shape": "L100_R131072_K6",
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "n_devices": int(n_dev),
+        "kind": "sched",
+        "status": "ok",
+        "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(mem),
+        "cost": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "collectives": rl.collective_bytes(compiled.as_text()),
+    }
+    rec["roofline"] = rl.roofline(rec, n_dev)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str)
+    ap.add_argument("--shape", type=str)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--sched", action="store_true")
+    ap.add_argument("--out", type=str, default="artifacts/dryrun")
+    ap.add_argument("--override", type=str, default="",
+                    help="cfg overrides, e.g. pure_dp=1,logits_chunk=512")
+    ap.add_argument("--suffix", type=str, default="",
+                    help="artifact tag suffix for hillclimb variants")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    overrides = _parse_overrides(args.override)
+
+    def emit(rec):
+        tag = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        if args.suffix:
+            tag += f"__{args.suffix}"
+            rec["variant"] = args.suffix
+            rec["overrides"] = overrides
+        path = os.path.join(args.out, tag + ".json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(
+            f"=== {tag}: {rec['status']}"
+            + (
+                f" compile={rec.get('compile_s')}s dominant="
+                f"{rec.get('roofline', {}).get('dominant')}"
+                if rec["status"] == "ok"
+                else f" ({rec.get('reason', '')[:60]})"
+            )
+        )
+
+    if args.sched:
+        emit(run_sched_cell(args.multi_pod))
+        return
+    if args.all:
+        for arch in configs.names():
+            for shape_name in SHAPES:
+                try:
+                    emit(run_cell(arch, shape_name, args.multi_pod, overrides))
+                except Exception:
+                    traceback.print_exc()
+                    emit(
+                        {
+                            "arch": arch,
+                            "shape": shape_name,
+                            "mesh": "multi" if args.multi_pod else "single",
+                            "status": "error",
+                            "reason": traceback.format_exc()[-800:],
+                        }
+                    )
+        return
+    emit(run_cell(args.arch, args.shape, args.multi_pod, overrides))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Elastic rescale: checkpoint-boundary mesh migration.
+
+``reshard(tree, old_mesh, new_mesh)`` moves a params/opt pytree between
+meshes of different DP size (scheduler grants changed). With real multi-host
+JAX this is device_put with the new NamedSharding (XLA reshards); the
+checkpoint path (save on mesh A, sharding-aware load on mesh B) covers
+node-count changes where the old mesh no longer exists.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.models import model as M
+from repro.train import sharding as shd
+
+
+def plan_mesh(n_devices: int, model_axis: int = None):
+    """Largest power-of-two (data, model) mesh that fits n_devices."""
+    import math
+
+    n = 1 << (n_devices.bit_length() - 1)
+    model = model_axis or min(16, n)
+    while n % model:
+        model //= 2
+    return (n // model, model)
+
+
+def reshard(tree: Any, new_mesh, pspec_fn=None) -> Any:
+    """Place every leaf with the auto-policy shardings of ``new_mesh``."""
+    shapes = jax.eval_shape(lambda: tree)
+    pspecs = (pspec_fn or shd.param_pspecs)(shapes, new_mesh)
+    sh = shd.shardings(pspecs, new_mesh)
+    return jax.tree.map(jax.device_put, tree, sh)
+
+
+def rescale_checkpoint(ckpt_dir: str, step: int, like: Any, new_mesh):
+    """Load a checkpoint written on any mesh onto ``new_mesh``."""
+    from repro.ckpt import checkpoint as C
+
+    shapes = jax.eval_shape(lambda: like)
+    sh = shd.shardings(shd.param_pspecs(shapes, new_mesh), new_mesh)
+    return C.load_checkpoint(ckpt_dir, step, like, sh)

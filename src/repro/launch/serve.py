@@ -1,0 +1,50 @@
+"""Serving driver: batched greedy/temperature decoding with the engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b --smoke \
+      --requests 6 --max-new 12
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import base as configs
+from repro.models import model as M
+from repro.serve.engine import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.smoke:
+        cfg = configs.reduced(cfg)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(
+        cfg, params, slots=args.slots, cache_len=args.cache_len,
+        temperature=args.temperature,
+    )
+    for i in range(args.requests):
+        eng.submit(Request(prompt=[1 + i, 2 + i, 3 + i], max_new_tokens=args.max_new))
+    t0 = time.time()
+    eng.run()
+    dt = time.time() - t0
+    toks = args.requests * args.max_new
+    print(
+        f"served {args.requests} requests / {toks} tokens in {dt:.2f}s "
+        f"({toks/dt:.1f} tok/s, {eng.steps_run} engine steps)"
+    )
+
+
+if __name__ == "__main__":
+    main()

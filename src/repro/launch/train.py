@@ -1,0 +1,70 @@
+"""End-to-end training driver (CPU-runnable; mesh-ready).
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b --smoke \
+      --steps 200 [--compress] [--ckpt-dir /tmp/ck]
+
+``--smoke`` uses the reduced same-family config (~100M-class runs use
+--d-model/--layers overrides); full configs are for real accelerators.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import base as configs
+from repro.data.pipeline import DataConfig
+from repro.optim import AdamWConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.smoke:
+        cfg = configs.reduced(cfg)
+    over = {}
+    if args.d_model:
+        over["d_model"] = args.d_model
+        over["head_dim"] = max(args.d_model // max(cfg.n_heads, 1), 16)
+    if args.layers:
+        over["n_layers"] = args.layers
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+
+    opt = AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps)
+    data = DataConfig(vocab=cfg.vocab, global_batch=args.batch, seq_len=args.seq)
+    tc = TrainConfig(
+        steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        compress_grads=args.compress,
+    )
+    trainer = Trainer(cfg, opt, data, tc)
+
+    def on_step(step, loss, dt, slow):
+        if step % 10 == 0:
+            flag = " [STRAGGLER]" if slow else ""
+            print(f"step {step:5d}  loss {loss:.4f}  {dt*1e3:7.1f} ms{flag}")
+
+    out = trainer.run(hooks={"on_step": on_step})
+    print(
+        f"done: loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
+        f"({len(out['straggler_flags'])} straggler flags)"
+    )
+
+
+if __name__ == "__main__":
+    main()

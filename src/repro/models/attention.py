@@ -1,0 +1,105 @@
+"""Blockwise causal GQA attention (pure-jnp reference path).
+
+Scans over query blocks so the (bq, S) score tile — not the full (S, S)
+matrix — is the peak activation; this is the math-identical oracle for
+kernels/flash_attention.py and the path the dry-run lowers. Supports sliding
+windows (gemma2/hymba), logit softcap (gemma2) and single-token decode with a
+KV cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import softcap
+
+_MASKED = -1e30
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[jax.Array] = None,
+    attn_softcap: Optional[float] = None,
+    q_block: int = 256,
+    unroll: bool = False,
+) -> jax.Array:
+    """q: (B, S, H, hd); k, v: (B, S, G, hd) with H = G * rep. Returns like q.
+
+    ``window`` may be a traced scalar (per-layer alternating patterns scan
+    over it); window <= 0 means global attention.
+    """
+    B, S, H, hd = q.shape
+    G = k.shape[2]
+    rep = H // G
+    bq = min(q_block, S)
+    assert S % bq == 0, (S, bq)
+    nb = S // bq
+    scale = hd**-0.5
+
+    qb = q.reshape(B, nb, bq, G, rep, hd).transpose(1, 0, 2, 3, 4, 5)
+    kpos = jnp.arange(S)
+
+    def block(carry, inp):
+        i, qi = inp  # qi: (B, bq, G, rep, hd)
+        qpos = i * bq + jnp.arange(bq)
+        s = jnp.einsum(
+            "bqgrd,bkgd->bgrqk", qi.astype(jnp.float32), k.astype(jnp.float32)
+        ) * scale
+        s = softcap(s, attn_softcap)
+        m = jnp.ones((bq, S), bool)
+        if causal:
+            m &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            in_win = (qpos[:, None] - kpos[None, :]) < window
+            m &= jnp.where(window > 0, in_win, True)
+        s = jnp.where(m[None, None, None], s, _MASKED)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgrqk,bkgd->bqgrd", p, v.astype(jnp.float32))
+        return carry, o.astype(q.dtype)
+
+    _, ob = jax.lax.scan(
+        block, None, (jnp.arange(nb), qb), unroll=nb if unroll else 1
+    )
+    return ob.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, hd)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    pos: jax.Array,
+    key_positions: jax.Array,
+    *,
+    window: Optional[jax.Array] = None,
+    attn_softcap: Optional[float] = None,
+) -> jax.Array:
+    """One-token decode. q: (B, 1, H, hd); caches: (B, S, G, hd).
+
+    ``key_positions`` (B, S) carries each cache slot's absolute token
+    position per row (ring-buffer safe; empty slots hold a large positive
+    sentinel); ``pos`` (B,) is each row's current position (cache already
+    updated at its slot) — rows may sit at different depths (continuous
+    batching)."""
+    B, _, H, hd = q.shape
+    S, G = k_cache.shape[1], k_cache.shape[2]
+    rep = H // G
+    scale = hd**-0.5
+    qg = q.reshape(B, G, rep, hd)
+    s = jnp.einsum(
+        "bgrd,bkgd->bgrk", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    s = softcap(s, attn_softcap)
+    m = key_positions <= pos[:, None]  # (B, S) valid cache entries
+    if window is not None:
+        in_win = (pos[:, None] - key_positions) < window
+        m = m & jnp.where(window > 0, in_win, True)
+    s = jnp.where(m[:, None, None], s, _MASKED)  # (B,1,1,S) vs (B,G,rep,S)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrk,bkgd->bgrd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

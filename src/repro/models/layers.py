@@ -1,0 +1,94 @@
+"""Common layers: RMSNorm, RoPE / M-RoPE, SwiGLU MLP, softcap, inits."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def he_init(key, shape, fan_in, dtype):
+    scale = jnp.sqrt(2.0 / max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------- RoPE -----
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 10000.0
+) -> jax.Array:
+    """Rotate (B, S, H, hd) by per-token positions (B, S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, hd/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    sections: Sequence[int],
+    theta: float = 10000.0,
+) -> jax.Array:
+    """Qwen2-VL M-RoPE: (B, S, 3) positions (t, h, w); head_dim/2 split into
+    ``sections`` frequency bands, each rotated by its own position stream."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    assert sum(sections) == hd // 2, (sections, hd)
+    # build per-frequency position selector
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=hd // 2
+    )  # (hd/2,) in {0,1,2}
+    pos = positions.astype(jnp.float32)  # (B, S, 3)
+    pos_per_freq = jnp.take_along_axis(
+        pos[..., None, :], sec_id[None, None, :, None], axis=-1
+    )[..., 0]  # (B, S, hd/2)
+    ang = pos_per_freq * inv  # (B, S, hd/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP ------
+def swiglu_init(key, d_model: int, d_ff: int, dtype) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "gate": he_init(kg, (d_model, d_ff), d_model, dtype),
+        "up": he_init(ku, (d_model, d_ff), d_model, dtype),
+        "down": he_init(kd, (d_ff, d_model), d_ff, dtype),
+    }
+
+
+def swiglu_apply(p: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ p["gate"])
+    return (g * (x @ p["up"])) @ p["down"]

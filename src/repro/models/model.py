@@ -1,0 +1,178 @@
+"""LM wrapper: embeddings -> scanned blocks -> norm -> logits, plus the
+train/serve entry points the launchers lower.
+
+Frontend stubs (DESIGN.md §4): [vlm] consumes precomputed patch embeddings
+(projected + prepended, M-RoPE 3D positions); [audio] consumes EnCodec token
+ids directly (the codec itself is outside the model).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.models.layers import embed_init, he_init, rms_norm, softcap
+from repro.train.meshctx import constrain
+
+PATCH_DIM = 1024  # stub frontend feature width (vlm)
+
+
+def param_dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def compute_dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    dtype = param_dtype(cfg)
+    ke, kb, ku, kp = jax.random.split(key, 4)
+    params = {
+        "embed": embed_init(ke, (cfg.vocab, cfg.d_model), dtype),
+        "blocks": tf.init_stacked_blocks(kb, cfg, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "unembed": he_init(ku, (cfg.d_model, cfg.vocab), cfg.d_model, dtype),
+    }
+    if cfg.family == "vlm":
+        params["patch_proj"] = he_init(kp, (PATCH_DIM, cfg.d_model), PATCH_DIM, dtype)
+    return params
+
+
+def param_shapes(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree without allocating (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------- positions ------
+def _mrope_positions(cfg: ArchConfig, B: int, S: int) -> jax.Array:
+    """Stub M-RoPE ids: patches get (0, h, w) on a sqrt grid; text advances
+    all three streams together (qwen2-vl semantics)."""
+    n_p = cfg.n_patches
+    grid = max(int(n_p**0.5), 1)
+    i = jnp.arange(S)
+    is_patch = i < n_p
+    t = jnp.where(is_patch, 0, i - n_p + grid)
+    h = jnp.where(is_patch, i // grid, i - n_p + grid)
+    w = jnp.where(is_patch, i % grid, i - n_p + grid)
+    pos = jnp.stack([t, h, w], axis=-1)  # (S, 3)
+    return jnp.broadcast_to(pos[None], (B, S, 3))
+
+
+def _positions(cfg: ArchConfig, B: int, S: int) -> jax.Array:
+    if cfg.mrope_sections is not None:
+        return _mrope_positions(cfg, B, S)
+    return jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+
+# ------------------------------------------------------------ forward ------
+def embed_inputs(params, cfg: ArchConfig, batch: dict) -> jax.Array:
+    dtype = compute_dtype(cfg)
+    x = params["embed"][batch["tokens"]].astype(dtype)  # (B, S_text, d)
+    if cfg.family == "vlm":
+        pe = batch["patch_embeds"].astype(dtype) @ params["patch_proj"].astype(dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    if cfg.name.startswith("gemma2"):
+        x = x * jnp.asarray(cfg.d_model**0.5, dtype)
+    return x
+
+
+def forward(params, cfg: ArchConfig, batch: dict) -> jax.Array:
+    """-> logits (B, S, vocab) in f32."""
+    x = embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = _positions(cfg, B, S)
+    x = tf.stack_forward(params["blocks"], cfg, x, positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["unembed"].astype(x.dtype)).astype(jnp.float32)
+    logits = constrain(logits, "data", None, "model")  # vocab-sharded
+    return softcap(logits, cfg.final_softcap)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict) -> jax.Array:
+    """Next-token CE over the text stream (frontend positions excluded)."""
+    x = embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = _positions(cfg, B, S)
+    x = tf.stack_forward(params["blocks"], cfg, x, positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    labels = batch["labels"]  # (B, S_text)
+    n_front = S - labels.shape[1]
+    x = x[:, n_front:, :]
+
+    unemb = params["unembed"].astype(x.dtype)
+    if cfg.logits_chunk and labels.shape[1] % cfg.logits_chunk == 0:
+        # chunked CE: never materialise (B, S, vocab) at once. jax.checkpoint
+        # on the chunk body is essential — without it the scan's backward
+        # saves every chunk's logits and the chunking saves nothing.
+        nc = labels.shape[1] // cfg.logits_chunk
+        xs = x.reshape(B, nc, cfg.logits_chunk, -1).transpose(1, 0, 2, 3)
+        ls = labels.reshape(B, nc, cfg.logits_chunk).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def chunk_nll(xc, lc):
+            lg = softcap((xc @ unemb).astype(jnp.float32), cfg.final_softcap)
+            lg = constrain(lg, "data", None, "model")
+            lp = jax.nn.log_softmax(lg, axis=-1)
+            return jnp.sum(
+                -jnp.take_along_axis(lp, lc[..., None], axis=-1)[..., 0]
+            )
+
+        def chunk(carry, inp):
+            xc, lc = inp
+            return carry + chunk_nll(xc, lc), None
+
+        tot, _ = jax.lax.scan(chunk, jnp.zeros((), jnp.float32), (xs, ls))
+        return tot / (B * labels.shape[1])
+
+    logits = softcap((x @ unemb).astype(jnp.float32), cfg.final_softcap)
+    logits = constrain(logits, "data", None, "model")  # vocab-sharded
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# ------------------------------------------------------------- serve -------
+def prefill(params, cfg: ArchConfig, batch: dict):
+    """Forward over the prompt; returns (last-token logits, populated cache).
+
+    The dry-run's ``prefill_*`` cells lower this: full-sequence compute with
+    the KV cache as an explicit output (logits only for the final position,
+    so the (B, S, vocab) tensor never materialises).
+    """
+    x = embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = _positions(cfg, B, S)
+    x, caches = tf.stack_forward(params["blocks"], cfg, x, positions, collect=True)
+    if cfg.has_attn:
+        caches["kpos"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, None], (cfg.n_layers, B, S)
+        )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = x[:, -1, :]
+    logits = (last @ params["unembed"].astype(x.dtype)).astype(jnp.float32)
+    return softcap(logits, cfg.final_softcap), caches
+
+
+def serve_step(params, cfg: ArchConfig, cache: dict, tokens: jax.Array, pos: jax.Array):
+    """One decode step. tokens: (B, 1) int32; pos: scalar OR (B,) int32
+    per-row absolute positions (continuous batching). Returns (logits
+    (B, vocab), new cache)."""
+    dtype = compute_dtype(cfg)
+    x = params["embed"][tokens].astype(dtype)  # (B, 1, d)
+    if cfg.name.startswith("gemma2"):
+        x = x * jnp.asarray(cfg.d_model**0.5, dtype)
+    B = x.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))  # (B,)
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(pos[:, None, None], (B, 1, 3))
+    else:
+        positions = pos[:, None]  # (B, 1)
+    x, new_cache = tf.stack_decode(params["blocks"], cfg, x, cache, pos, positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ params["unembed"].astype(x.dtype)).astype(jnp.float32)
+    return softcap(logits, cfg.final_softcap), new_cache

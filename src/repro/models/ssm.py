@@ -1,0 +1,180 @@
+"""Mamba-2 SSD (state-space duality) block — chunked matmul formulation.
+
+Implements the chunk-parallel SSD algorithm (Dao & Gu, arXiv:2405.21060):
+intra-chunk attention-like matmuls + an inter-chunk state recurrence. The
+chunked form is matmul-rich (MXU-friendly) and O(S) in sequence length; the
+decode path carries an O(1) recurrent state (conv window + SSM state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import he_init, rms_norm
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """(..., q) -> (..., q, q) lower-triangular pairwise cumulative sums:
+    out[i, j] = sum_{j < m <= i} x[m], -inf above the diagonal."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(
+    x: jax.Array,      # (B, S, H, P) inputs per head
+    dt: jax.Array,     # (B, S, H) softplus'd step sizes
+    A: jax.Array,      # (H,) negative state-decay rates
+    Bm: jax.Array,     # (B, S, N) input projections (n_groups = 1)
+    Cm: jax.Array,     # (B, S, N) output projections
+    chunk: int,
+    h0: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    xd = x * dt[..., None]                       # dt-weighted input
+    dA = dt * A[None, None, :]                   # (B, S, H), <= 0
+    # chunked views
+    xc = xd.reshape(Bsz, nc, chunk, H, P)
+    dAc = dA.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    dA_cs = jnp.cumsum(dAc, axis=2)              # (B, nc, q, H)
+
+    # 1) intra-chunk (diagonal blocks): attention-like masked matmul
+    L = jnp.exp(_segsum(dAc.transpose(0, 1, 3, 2)))      # (B, nc, H, q, q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)       # (B, nc, q, q)
+    y_diag = jnp.einsum(
+        "bchqk,bcqk,bckhp->bcqhp", L, scores, xc
+    )
+
+    # 2) per-chunk states: decay-weighted sum of inputs
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (B, nc, q, H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_states, xc)
+
+    # 3) inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])            # (B, nc, H)
+
+    def step(h, inp):
+        dec, st = inp  # (B, H), (B, H, P, N)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), x.dtype)
+    h_last, h_prev = jax.lax.scan(
+        step,
+        h0,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)),
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)             # (B, nc, H, P, N)
+
+    # 4) state -> output within each chunk
+    state_decay = jnp.exp(dA_cs)                          # (B, nc, q, H)
+    y_off = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", Cc, h_prev, state_decay
+    )
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, h_last
+
+
+def init_mamba2(key, cfg, dtype):
+    """Mamba-2 mixer parameters. conv over (x, B, C) concatenated."""
+    d, di, n, hh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "in_proj": he_init(k1, (d, 2 * di + 2 * n + hh), d, dtype),
+        "conv_w": he_init(k2, (cfg.conv_kernel, conv_dim), cfg.conv_kernel, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, hh, dtype=jnp.float32)
+        ),
+        "D": jnp.ones((hh,), jnp.float32),
+        "dt_bias": jnp.zeros((hh,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": he_init(k5, (di, d), di, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x: (B, S, D); w: (K, D)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return out + b[None, None, :]
+
+
+def apply_mamba2(p: dict, x: jax.Array, cfg, return_state: bool = False):
+    """Full-sequence Mamba-2 mixer. x: (B, S, d) -> (B, S, d).
+
+    With ``return_state`` also emits the decode cache (conv tail + final SSD
+    state) so prefill can hand off to serve_step."""
+    B, S, d = x.shape
+    di, n, hh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc_raw, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, S, H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    xh = xs.reshape(B, S, hh, hd)
+    y, h_last = ssd_scan(
+        xh, dt.astype(x.dtype), A.astype(x.dtype), Bm, Cm, cfg.ssm_chunk
+    )
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        cache = {"conv": xbc_raw[:, S - (cfg.conv_kernel - 1) :, :], "state": h_last}
+        return out, cache
+    return out
+
+
+def init_mamba2_cache(cfg, batch: int, dtype):
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        "state": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), dtype
+        ),
+    }
+
+
+def apply_mamba2_decode(
+    p: dict, x: jax.Array, cache: dict, cfg
+) -> tuple[jax.Array, dict]:
+    """Single-token decode. x: (B, 1, d)."""
+    B = x.shape[0]
+    di, n, hh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    # conv over the rolling window
+    win = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B, K, conv_dim)
+    conv_out = jnp.einsum("bkd,kd->bd", win, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :]
+    xs, Bm, Cm = jnp.split(xbc1, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])  # (B, H)
+    xh = xs.reshape(B, hh, hd)
+    dBx = jnp.einsum(
+        "bn,bh,bhp->bhpn", Bm[:, 0].astype(jnp.float32), dt, xh.astype(jnp.float32)
+    )
+    state = cache["state"].astype(jnp.float32) * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), state)
+    y = y.astype(x.dtype) + xh * p["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, 1, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    new_cache = {"conv": win[:, 1:], "state": state.astype(cache["state"].dtype)}
+    return y @ p["out_proj"], new_cache

@@ -1,0 +1,346 @@
+"""Block assembly: dense / MoE / SSM / hybrid layers, scanned over depth.
+
+Layer parameters are stacked on a leading (n_layers,) axis and consumed by
+``jax.lax.scan`` (keeps HLO size O(1) in depth); per-layer alternation (e.g.
+gemma2 local/global windows) rides along as scanned per-layer scalars.
+``jax.checkpoint`` wraps the block body when cfg.remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    apply_mrope,
+    apply_rope,
+    he_init,
+    rms_norm,
+    swiglu_apply,
+    swiglu_init,
+)
+from repro.train.meshctx import constrain
+
+
+# ------------------------------------------------------------- init --------
+def init_attn(key, cfg: ArchConfig, dtype):
+    d, H, G, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": he_init(kq, (d, H * hd), d, dtype),
+        "wk": he_init(kk, (d, G * hd), d, dtype),
+        "wv": he_init(kv, (d, G * hd), d, dtype),
+        "wo": he_init(ko, (H * hd, d), H * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((G * hd,), dtype)
+        p["bv"] = jnp.zeros((G * hd,), dtype)
+    return p
+
+
+def init_block(key, cfg: ArchConfig, dtype):
+    keys = jax.random.split(key, 8)
+    p = {"ln1": jnp.zeros((cfg.d_model,), dtype)}
+    if cfg.has_attn:
+        p["attn"] = init_attn(keys[0], cfg, dtype)
+    if cfg.has_ssm:
+        p["ssm"] = ssm_lib.init_mamba2(keys[1], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["fuse_a"] = jnp.zeros((cfg.d_model,), dtype)  # learned fuse norms
+        p["fuse_s"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.n_experts > 0:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        p["moe"] = moe_lib.init_moe(
+            keys[2], cfg.d_model, cfg.d_expert, cfg.n_experts,
+            cfg.n_shared_experts, dtype,
+        )
+    elif cfg.d_ff > 0:
+        p["ln2"] = jnp.zeros((cfg.d_model,), dtype)
+        p["mlp"] = swiglu_init(keys[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_stacked_blocks(key, cfg: ArchConfig, dtype):
+    """vmap init over layers -> leaves with a leading (n_layers,) axis."""
+    keys = jax.random.split(key, cfg.n_layers)
+    return jax.vmap(lambda k: init_block(k, cfg, dtype))(keys)
+
+
+def layer_windows(cfg: ArchConfig) -> jax.Array:
+    """Per-layer sliding window sizes; 0 = global attention."""
+    if cfg.window is None:
+        return jnp.zeros((cfg.n_layers,), jnp.int32)
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.window_pattern == 0:  # all layers local
+        return jnp.full((cfg.n_layers,), cfg.window, jnp.int32)
+    is_global = (idx % cfg.window_pattern) == (cfg.window_pattern - 1)
+    return jnp.where(is_global, 0, cfg.window).astype(jnp.int32)
+
+
+# ------------------------------------------------------------ forward ------
+def _qkv(p, cfg: ArchConfig, x, positions):
+    B, S, _ = x.shape
+    H, G, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, G, hd)
+    v = v.reshape(B, S, G, hd)
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p, cfg: ArchConfig, x, positions, window, collect=False):
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    if cfg.attn_head_parallel:
+        # head-sharded attention: all compute is head-local; collectives
+        # collapse to one seq all-gather (entry) + one reduce-scatter (exit)
+        # instead of per-q-block partial-sum all-reduces (§Perf hillclimb)
+        q = constrain(q, "data", None, "model", None)
+        k = constrain(k, "data", None, "model", None)
+        v = constrain(v, "data", None, "model", None)
+    o = attn_lib.attention(
+        q, k, v, causal=True, window=window, attn_softcap=cfg.attn_softcap,
+        unroll=cfg.attn_unroll,
+    )
+    if cfg.attn_head_parallel:
+        o = constrain(o, "data", None, "model", None)
+    out = o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]
+    if not collect:
+        return out, None
+    if cfg.kv_cache_quant:  # prefill emits the quantised cache layout
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return out, {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    return out, {"k": k, "v": v}
+
+
+def block_forward(p, cfg: ArchConfig, x, positions, window, collect=False):
+    """One layer; with ``collect`` also emits decode-cache tensors."""
+    cache = {}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.family == "hybrid":
+        ao, kv = attn_forward(p["attn"], cfg, h, positions, window, collect)
+        if collect:
+            cache.update(kv)
+            so, sc = ssm_lib.apply_mamba2(p["ssm"], h, cfg, return_state=True)
+            cache.update(sc)
+        else:
+            so = ssm_lib.apply_mamba2(p["ssm"], h, cfg)
+        mixed = 0.5 * (
+            rms_norm(ao, p["fuse_a"], cfg.norm_eps)
+            + rms_norm(so, p["fuse_s"], cfg.norm_eps)
+        )
+        x = x + mixed
+    elif cfg.has_ssm:
+        if collect:
+            so, sc = ssm_lib.apply_mamba2(p["ssm"], h, cfg, return_state=True)
+            cache.update(sc)
+        else:
+            so = ssm_lib.apply_mamba2(p["ssm"], h, cfg)
+        x = x + so
+    else:
+        ao, kv = attn_forward(p["attn"], cfg, h, positions, window, collect)
+        if collect:
+            cache.update(kv)
+        x = x + ao
+        if cfg.attn_head_parallel:
+            # re-shard the residual to the SP carry layout right after the
+            # attention block: turns wo's partial-sum all-reduce into a
+            # reduce-scatter (halves its wire bytes) — §Perf kimi iteration
+            x = constrain(x, "data", "model", None)
+    if "ln2" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.n_experts > 0:
+            out = moe_lib.apply_moe_auto(p["moe"], h2, cfg)
+        elif cfg.mlp_ep:
+            from repro.train.meshctx import current_mesh
+
+            mesh = current_mesh()
+            if mesh is not None and "model" in mesh.axis_names:
+                out = moe_lib.apply_mlp_ep(p["mlp"], h2, cfg, mesh)
+            else:
+                out = swiglu_apply(p["mlp"], h2)
+        else:
+            out = swiglu_apply(p["mlp"], h2)
+        x = x + out
+    # residual carry sharding: SP (seq over 'model') by default — the scan
+    # saves this for backward, so SP cuts saved-activation HBM by the TP
+    # degree (DESIGN.md §5); pure-DP plans carry batch over every axis.
+    if cfg.pure_dp:
+        x = constrain(x, "batch", None, None)
+    else:
+        x = constrain(x, "data", "model", None)
+    return (x, cache) if collect else (x, None)
+
+
+def stack_forward(stacked, cfg: ArchConfig, x, positions, collect=False):
+    """Scan blocks over depth; with ``collect`` returns stacked caches."""
+    windows = layer_windows(cfg)
+
+    def body(h, inp):
+        p, w = inp
+        return block_forward(p, cfg, h, positions, w, collect)
+
+    if cfg.remat:
+        if cfg.remat_policy == "dots":
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        else:
+            body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, (stacked, windows))
+    return (x, caches) if collect else x
+
+
+# ------------------------------------------------------------- decode ------
+def quantize_kv(t: jax.Array):
+    """(..., hd) -> int8 values + f32 per-(token, head) scale."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0]
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    """Stacked per-layer decode caches. ``kpos`` tracks each slot's absolute
+    token position (ring-buffer safe for windowed archs). With
+    ``cfg.kv_cache_quant`` K/V are stored int8 with per-(token, head) scales
+    — halves decode's dominant HBM stream (EXPERIMENTS.md §Perf decode)."""
+    cache = {}
+    if cfg.has_attn:
+        shape = (cfg.n_layers, batch, cache_len, cfg.n_kv, cfg.hd)
+        if cfg.kv_cache_quant:
+            cache["k"] = jnp.zeros(shape, jnp.int8)
+            cache["v"] = jnp.zeros(shape, jnp.int8)
+            cache["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            cache["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+        else:
+            cache["k"] = jnp.zeros(shape, dtype)
+            cache["v"] = jnp.zeros(shape, dtype)
+        cache["kpos"] = jnp.full(
+            (cfg.n_layers, batch, cache_len), 2**30, jnp.int32
+        )
+    if cfg.has_ssm:
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        cache["conv"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.conv_kernel - 1, conv_dim), dtype
+        )
+        cache["state"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+            dtype,
+        )
+    return cache
+
+
+def attn_decode(p, cfg: ArchConfig, x, cache_slice, pos, positions, window):
+    """x: (B, 1, d); cache_slice holds (B, S, G, hd) k/v (+ scales when
+    quantised); pos: (B,) per-row token indices (continuous batching — rows
+    may sit at different depths).
+
+    Each row's slot is pos_b mod cache_len (ring buffer for windowed archs);
+    ``kpos`` (B, S) records the absolute position held by each slot."""
+    B = x.shape[0]
+    q, k, v = _qkv(p, cfg, x, positions)
+    k_cache, v_cache, kpos = cache_slice["k"], cache_slice["v"], cache_slice["kpos"]
+    cache_len = k_cache.shape[1]
+    slot = (pos % cache_len).astype(jnp.int32)  # (B,)
+    rows = jnp.arange(B)
+    new_cache = {}
+    if cfg.kv_cache_quant:
+        kq, ks = quantize_kv(k[:, 0])
+        vq, vs = quantize_kv(v[:, 0])
+        k_cache = k_cache.at[rows, slot].set(kq)
+        v_cache = v_cache.at[rows, slot].set(vq)
+        k_scale = cache_slice["k_scale"].at[rows, slot].set(ks)
+        v_scale = cache_slice["v_scale"].at[rows, slot].set(vs)
+        new_cache["k_scale"], new_cache["v_scale"] = k_scale, v_scale
+        k_full = dequantize_kv(k_cache, k_scale, q.dtype)
+        v_full = dequantize_kv(v_cache, v_scale, q.dtype)
+    else:
+        k_cache = k_cache.at[rows, slot].set(k[:, 0])
+        v_cache = v_cache.at[rows, slot].set(v[:, 0])
+        k_full, v_full = k_cache, v_cache
+    kpos = kpos.at[rows, slot].set(pos.astype(jnp.int32))
+    o = attn_lib.decode_attention(
+        q, k_full, v_full, pos, kpos,
+        window=window, attn_softcap=cfg.attn_softcap,
+    )
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    new_cache.update({"k": k_cache, "v": v_cache, "kpos": kpos})
+    return o, new_cache
+
+
+def block_decode(p, cfg: ArchConfig, x, cache_slice, pos, positions, window):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_cache = {}
+    if cfg.family == "hybrid":
+        ao, attn_cache = attn_decode(
+            p["attn"], cfg, h, cache_slice, pos, positions, window,
+        )
+        new_cache.update(attn_cache)
+        so, sc = ssm_lib.apply_mamba2_decode(
+            p["ssm"], h,
+            {"conv": cache_slice["conv"], "state": cache_slice["state"]},
+            cfg,
+        )
+        new_cache.update(sc)
+        x = x + 0.5 * (
+            rms_norm(ao, p["fuse_a"], cfg.norm_eps)
+            + rms_norm(so, p["fuse_s"], cfg.norm_eps)
+        )
+    elif cfg.has_ssm:
+        so, sc = ssm_lib.apply_mamba2_decode(
+            p["ssm"], h,
+            {"conv": cache_slice["conv"], "state": cache_slice["state"]},
+            cfg,
+        )
+        new_cache.update(sc)
+        x = x + so
+    else:
+        ao, attn_cache = attn_decode(
+            p["attn"], cfg, h, cache_slice, pos, positions, window,
+        )
+        new_cache.update(attn_cache)
+        x = x + ao
+    if "ln2" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.n_experts > 0:
+            out = moe_lib.apply_moe_auto(p["moe"], h2, cfg)
+        else:
+            out = swiglu_apply(p["mlp"], h2)
+        x = x + out
+    return x, new_cache
+
+
+def stack_decode(stacked, cfg: ArchConfig, x, cache, pos, positions):
+    windows = layer_windows(cfg)
+
+    def body(h, inp):
+        p, w, csl = inp
+        h2, new_c = block_decode(p, cfg, h, csl, pos, positions, w)
+        return h2, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (stacked, windows, cache))
+    return x, new_cache

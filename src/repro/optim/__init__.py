@@ -1,0 +1,6 @@
+"""Optimizer substrate (no external deps): AdamW, schedules, compression."""
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+)

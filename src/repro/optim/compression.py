@@ -1,0 +1,54 @@
+"""Gradient compression for the DP all-reduce: int8 quantisation with
+error feedback (1-bit-Adam-style residual correction).
+
+Wraps the gradient tree before the (XLA-inserted or explicit) all-reduce:
+    q, state = compress(grads, state)      # int8 + per-tensor scales
+    grads_hat = decompress(q)              # used for the update
+The quantisation residual is carried in ``state`` and added back next step,
+so the *accumulated* gradient is unbiased — convergence-tested in
+tests/test_compression.py on a real LM.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compress(grads: Any, err_state: Any):
+    """-> (quantised tree of (int8 values, f32 scale), new error state)."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(corrected)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(corrected / scale), -127, 127).astype(jnp.int8)
+        residual = corrected - q.astype(jnp.float32) * scale
+        return (q, scale), residual
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(err_state)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    q_tree = jax.tree_util.tree_unflatten(tdef, [p[0] for p in pairs])
+    new_err = jax.tree_util.tree_unflatten(tdef, [p[1] for p in pairs])
+    return q_tree, new_err
+
+
+def decompress(q_tree: Any, dtype=jnp.float32) -> Any:
+    return jax.tree.map(
+        lambda qs: (qs[0].astype(jnp.float32) * qs[1]).astype(dtype),
+        q_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+    )
+
+
+def compressed_bytes(q_tree: Any) -> int:
+    """Wire bytes of the compressed gradients (vs 4x for f32)."""
+    leaves = jax.tree_util.tree_leaves(
+        q_tree, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+    )
+    return sum(int(q.size) + 4 for q, _ in leaves)

@@ -1,0 +1,1 @@
+"""Cluster-scheduling substrate: traces, simulator, mesh-slice job manager."""

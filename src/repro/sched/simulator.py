@@ -1,0 +1,69 @@
+"""Trace-driven cluster simulator (paper §4) + algorithm comparison API."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, graph, ogasched, regret
+from repro.sched import trace
+
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    rewards: np.ndarray           # (T,)
+    avg_reward: float
+    cumulative: float
+    wall_s: float
+    regret: Optional[float] = None
+    regret_bound: Optional[float] = None
+
+
+def run_all(
+    cfg: trace.TraceConfig,
+    eta0: float = 25.0,
+    decay: float = 0.9999,
+    algorithms: tuple = ("ogasched",) + baselines.BASELINES,
+    with_regret: bool = False,
+    oracle_iters: int = 2000,
+) -> dict[str, SimResult]:
+    spec, arrivals = trace.make(cfg)
+    out: dict[str, SimResult] = {}
+    y_star = None
+    if with_regret:
+        y_star = regret.offline_optimum(spec, arrivals, iters=oracle_iters)
+    for name in algorithms:
+        t0 = time.time()
+        if name == "ogasched":
+            rewards, _ = ogasched.run(spec, arrivals, eta0=eta0, decay=decay)
+        else:
+            rewards = baselines.run(spec, arrivals, name)
+        rewards = np.asarray(jax.block_until_ready(rewards))
+        res = SimResult(
+            name=name,
+            rewards=rewards,
+            avg_reward=float(rewards.mean()),
+            cumulative=float(rewards.sum()),
+            wall_s=time.time() - t0,
+        )
+        if with_regret and name == "ogasched":
+            res.regret = float(
+                regret.regret(spec, arrivals, jnp.asarray(rewards), y_star)
+            )
+            res.regret_bound = float(regret.regret_bound(spec, cfg.T))
+        out[name] = res
+    return out
+
+
+def improvement_over_baselines(results: dict[str, SimResult]) -> dict[str, float]:
+    oga = results["ogasched"].avg_reward
+    return {
+        n: 100.0 * (oga / r.avg_reward - 1.0)
+        for n, r in results.items()
+        if n != "ogasched"
+    }

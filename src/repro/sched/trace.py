@@ -1,0 +1,132 @@
+"""Synthetic Alibaba-like trace generation (paper §4 'Traces').
+
+The paper hybridises cluster-trace-v2018 and cluster-trace-gpu-v2020: machine
+specifications, job arrival patterns, and per-job resource requirements. Those
+datasets are not available offline, so we generate a seeded synthetic trace
+with the same structure: heterogeneous machine templates, job-type resource
+templates, and non-stationary Bernoulli arrivals (diurnal modulation +
+bursts), thinned by the paper's arrival probability rho (Tab. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import utilities
+from repro.core.graph import ClusterSpec
+
+# Machine templates: capacities per resource type
+# K = 6: [CPU cores, MEM (GB/4), GPU (sm-slices), NPU, TPU, FPGA]  (Tab. 2)
+MACHINE_TEMPLATES = np.array(
+    [
+        # cpu   mem   gpu  npu  tpu  fpga
+        [96.0, 90.0, 16.0, 0.0, 0.0, 0.0],   # GPU box (v100x8-ish)
+        [128.0, 128.0, 0.0, 16.0, 0.0, 0.0],  # NPU box
+        [96.0, 64.0, 0.0, 0.0, 32.0, 0.0],   # TPU host
+        [64.0, 48.0, 8.0, 0.0, 0.0, 8.0],    # FPGA/mixed
+        [192.0, 180.0, 4.0, 4.0, 4.0, 4.0],  # fat general node
+        [48.0, 32.0, 2.0, 0.0, 0.0, 0.0],    # small worker
+    ]
+)
+
+# Job-type templates: max requests per resource type (before contention mult.)
+JOB_TEMPLATES = np.array(
+    [
+        [8.0, 16.0, 4.0, 0.0, 0.0, 0.0],   # distributed DNN training
+        [4.0, 8.0, 0.0, 4.0, 0.0, 0.0],    # NPU inference service
+        [16.0, 32.0, 0.0, 0.0, 0.0, 0.0],  # graph computation (CPU/mem)
+        [2.0, 4.0, 0.0, 0.0, 8.0, 0.0],    # TPU training
+        [8.0, 8.0, 2.0, 0.0, 0.0, 2.0],    # video transcoding (FPGA)
+        [4.0, 32.0, 0.0, 0.0, 0.0, 0.0],   # in-memory analytics
+        [8.0, 8.0, 1.0, 1.0, 1.0, 0.0],    # federated-learning aggregator
+        [2.0, 2.0, 2.0, 0.0, 0.0, 0.0],    # notebook / interactive
+        [32.0, 16.0, 0.0, 0.0, 0.0, 4.0],  # scientific batch
+        [6.0, 12.0, 8.0, 0.0, 0.0, 0.0],   # LLM serving
+    ]
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceConfig:
+    L: int = 10
+    R: int = 128
+    K: int = 6
+    T: int = 2000
+    rho: float = 0.7            # job arrival probability (Tab. 2)
+    contention: float = 10.0    # requirement multiplier (Tab. 2)
+    density: float = 0.5        # P[(l, r) in E]
+    alpha_range: tuple = (1.0, 1.5)
+    beta_range: tuple = (0.3, 0.5)
+    utility: str = "mixed"      # or linear/log/reciprocal/poly
+    seed: int = 0
+    diurnal: bool = True        # non-stationary arrival modulation
+    burst_prob: float = 0.02    # prob. a slot starts a 20-slot burst
+
+
+def build_spec(cfg: TraceConfig) -> ClusterSpec:
+    rng = np.random.default_rng(cfg.seed)
+    # instances drawn from templates with +-20% jitter
+    t_idx = rng.integers(0, len(MACHINE_TEMPLATES), cfg.R)
+    c = MACHINE_TEMPLATES[t_idx][:, : cfg.K] * rng.uniform(
+        0.8, 1.2, (cfg.R, cfg.K)
+    )
+    c = np.maximum(c, 1.0)
+    # job types cycle through templates with jitter, scaled by contention
+    j_idx = np.arange(cfg.L) % len(JOB_TEMPLATES)
+    a = JOB_TEMPLATES[j_idx][:, : cfg.K] * rng.uniform(0.9, 1.1, (cfg.L, cfg.K))
+    a = np.maximum(a, 0.25) * cfg.contention / 10.0
+    # adjacency: random with guaranteed coverage; jobs only connect to
+    # instances that have any of their dominant resources (service locality)
+    compat = (a[:, None, :] > 0) & (c[None, :, :] > 0)
+    compat_any = compat.any(-1)
+    mask = (rng.uniform(size=(cfg.L, cfg.R)) < cfg.density) & compat_any
+    for l in range(cfg.L):  # ensure every port reachable
+        if not mask[l].any():
+            mask[l, rng.integers(0, cfg.R)] = True
+    for r in range(cfg.R):
+        if not mask[:, r].any():
+            mask[rng.integers(0, cfg.L), r] = True
+    alpha = rng.uniform(*cfg.alpha_range, (cfg.R, cfg.K))
+    beta = np.linspace(cfg.beta_range[0], cfg.beta_range[1], cfg.K)
+    if cfg.utility == "mixed":
+        kinds = np.arange(cfg.K) % utilities.NUM_KINDS
+    else:
+        kinds = np.full(cfg.K, utilities.NAME_TO_KIND[cfg.utility])
+    return ClusterSpec(
+        mask=jnp.asarray(mask, jnp.float32),
+        a=jnp.asarray(a, jnp.float32),
+        c=jnp.asarray(c, jnp.float32),
+        alpha=jnp.asarray(alpha, jnp.float32),
+        beta=jnp.asarray(beta, jnp.float32),
+        kinds=jnp.asarray(kinds, jnp.int32),
+    )
+
+
+def build_arrivals(cfg: TraceConfig, multi: bool = False) -> jax.Array:
+    """(T, L) arrival indicators (or counts when ``multi``)."""
+    rng = np.random.default_rng(cfg.seed + 1)
+    base = np.full((cfg.T, cfg.L), cfg.rho)
+    if cfg.diurnal:
+        t = np.arange(cfg.T)[:, None]
+        phase = rng.uniform(0, 2 * np.pi, (1, cfg.L))
+        base = base * (0.75 + 0.25 * np.sin(2 * np.pi * t / 288.0 + phase))
+    # bursts: short windows where a port fires every slot
+    burst = np.zeros_like(base, dtype=bool)
+    starts = rng.uniform(size=(cfg.T, cfg.L)) < cfg.burst_prob
+    for l in range(cfg.L):
+        for t0 in np.nonzero(starts[:, l])[0]:
+            burst[t0 : t0 + 20, l] = True
+    p = np.clip(np.where(burst, 0.95, base), 0.0, 1.0)
+    if multi:
+        x = rng.poisson(p * 2.0)
+        return jnp.asarray(x, jnp.int32)
+    x = rng.uniform(size=p.shape) < p
+    return jnp.asarray(x, jnp.float32)
+
+
+def make(cfg: TraceConfig):
+    """Convenience: (spec, arrivals)."""
+    return build_spec(cfg), build_arrivals(cfg)

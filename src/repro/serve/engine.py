@@ -1,0 +1,117 @@
+"""Batched serving engine: continuous batching over a fixed slot pool.
+
+Requests occupy batch slots; every engine step decodes one token for ALL
+active slots in a single ``serve_step`` call with per-row positions (the
+decode cells of the dry-run lower exactly this step). Finished slots (eos /
+max_new_tokens / cache exhaustion) free immediately and refill from the
+queue mid-flight; the per-row kpos mask keeps rows at different depths —
+and windowed ring-buffer archs — correct.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos: Optional[int] = None
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        slots: int = 4,
+        cache_len: int = 128,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.cfg, self.params = cfg, params
+        self.slots, self.cache_len = slots, cache_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        dt = jnp.dtype(cfg.compute_dtype)
+        self.cache = tf.init_cache(cfg, slots, cache_len, dt)
+        self.pos = np.zeros(slots, np.int64)       # next position per slot
+        self.pending = np.zeros(slots, np.int32)   # token to feed per slot
+        self.active: list[Optional[Request]] = [None] * slots
+        self.queue: list[Request] = []
+        self.steps_run = 0
+        self._step = jax.jit(
+            lambda c, t, p: M.serve_step(self.params, self.cfg, c, t, p)
+        )
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _reset_slot(self, s: int):
+        """Invalidate a slot's cache rows for reuse (kpos sentinel)."""
+        if "kpos" in self.cache:
+            self.cache["kpos"] = self.cache["kpos"].at[:, s].set(2**30)
+        if "state" in self.cache:
+            self.cache["state"] = self.cache["state"].at[:, s].set(0.0)
+            self.cache["conv"] = self.cache["conv"].at[:, s].set(0.0)
+        self.pos[s] = 0
+
+    def _fill_slots(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self._reset_slot(s)
+                self.active[s] = req
+                req._fed = 0  # tokens of the prompt fed so far
+                self.pending[s] = req.prompt[0]
+
+    def step(self) -> int:
+        """One batched decode step across all slots."""
+        self._fill_slots()
+        act = [s for s in range(self.slots) if self.active[s] is not None]
+        if not act:
+            return 0
+        toks = jnp.asarray(self.pending[:, None])
+        pos = jnp.asarray(self.pos.astype(np.int32))
+        logits, self.cache = self._step(self.cache, toks, pos)
+        self.steps_run += 1
+        for s in act:
+            req = self.active[s]
+            self.pos[s] += 1
+            req._fed += 1
+            if req._fed < len(req.prompt):  # still prefilling the prompt
+                self.pending[s] = req.prompt[req._fed]
+                continue
+            row = logits[s]
+            if self.temperature > 0:
+                self.key, sub = jax.random.split(self.key)
+                nxt = int(jax.random.categorical(sub, row / self.temperature))
+            else:
+                nxt = int(jnp.argmax(row))
+            req.out.append(nxt)
+            self.pending[s] = nxt
+            if (
+                (req.eos is not None and nxt == req.eos)
+                or len(req.out) >= req.max_new_tokens
+                or self.pos[s] >= self.cache_len
+            ):
+                req.done = True
+                self.active[s] = None
+        return len(act)
+
+    def run(self, max_iters: int = 10_000) -> None:
+        it = 0
+        while (self.queue or any(r is not None for r in self.active)) and it < max_iters:
+            self.step()
+            it += 1

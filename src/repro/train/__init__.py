@@ -1,0 +1,1 @@
+"""Training substrate: sharding policy, step factories, trainer loop."""

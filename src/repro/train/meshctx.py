@@ -1,0 +1,68 @@
+"""Mesh context for in-model sharding constraints.
+
+Model code calls ``constrain(x, 'data', None, 'model')``-style hints; when no
+mesh is active (single-device smoke tests) they are no-ops. 'data' expands to
+the combined DP axes (('pod','data') on multi-pod meshes). Constraints are
+skipped per-dim when the dim size is not divisible by the axis size, so one
+annotation serves every architecture.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_mesh", default=None
+)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    tok = _MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.reset(tok)
+
+
+def _resolve(axis, mesh: Mesh):
+    if axis == "data":
+        return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    if axis == "batch":  # pure-DP plans: every axis carries batch
+        return tuple(mesh.axis_names)
+    return axis
+
+
+def _size(axes, mesh: Mesh) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def constrain(x: jax.Array, *spec) -> jax.Array:
+    """with_sharding_constraint if a mesh is active and dims divide."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    resolved = []
+    for dim, axis in enumerate(spec):
+        axes = _resolve(axis, mesh)
+        size = _size(axes, mesh)
+        if axis is None or x.shape[dim] % size != 0 or size == 1:
+            resolved.append(None)
+        else:
+            resolved.append(axes if isinstance(axes, (str, type(None))) else tuple(axes))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved))
+    )

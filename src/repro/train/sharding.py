@@ -1,0 +1,143 @@
+"""Divisibility-driven auto-sharding policy (FSDP + TP).
+
+Per tensor: the largest dim divisible by the TP axis gets 'model'; the
+largest remaining dim divisible by the combined DP axes gets ('pod','data')
+(or ('data',) single-pod). Leading layer-stack dims of scanned params/caches
+are excluded (scan slices them every iteration). This one rule covers all 10
+architectures — including awkward head counts (28H, 25H) where head dims are
+not 16-divisible and the policy falls through to d_model or seq dims.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def auto_pspec(
+    shape: Sequence[int],
+    mesh: Mesh,
+    *,
+    skip_dims: Sequence[int] = (),
+    batch_dim: Optional[int] = None,
+) -> P:
+    """Assign mesh axes to tensor dims by size + divisibility.
+
+    ``batch_dim``: force this dim onto the DP axes (inputs/caches); if it is
+    not divisible by the full DP product, fall back to its largest divisible
+    prefix ('pod' alone, or nothing).
+    """
+    assign: list = [None] * len(shape)
+    used_axes: set = set()
+
+    def try_assign(dim: int, axes) -> bool:
+        size = _axis_size(mesh, axes)
+        if shape[dim] % size == 0 and shape[dim] >= size and size > 1:
+            assign[dim] = axes if isinstance(axes, str) else tuple(axes)
+            used_axes.update([axes] if isinstance(axes, str) else axes)
+            return True
+        return False
+
+    dps = dp_axes(mesh)
+    if batch_dim is not None:
+        # prefer full DP product, then suffix sub-products, then nothing
+        for cand in (dps,) + tuple(dps[i:] for i in range(1, len(dps))):
+            if try_assign(batch_dim, cand):
+                break
+
+    dims = sorted(
+        (d for d in range(len(shape)) if d not in skip_dims and assign[d] is None),
+        key=lambda d: -shape[d],
+    )
+    # TP first (largest dim), then FSDP over the remaining DP axes
+    for d in dims:
+        if "model" not in used_axes and try_assign(d, "model"):
+            break
+    rem_dp = tuple(a for a in dps if a not in used_axes)
+    if rem_dp:
+        for d in dims:
+            if assign[d] is None and try_assign(d, rem_dp):
+                break
+    return P(*assign)
+
+
+def param_pspecs(shapes: Any, mesh: Mesh) -> Any:
+    """PartitionSpecs for a model param pytree (ShapeDtypeStructs).
+
+    Leaves under 'blocks' carry a leading (n_layers,) scan dim -> skipped.
+    """
+
+    def leaf(path, s):
+        keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        in_blocks = "blocks" in keys
+        skip = (0,) if in_blocks and len(s.shape) > 1 else ()
+        # expert weights: experts on 'model' (matches the EP shard_map spec,
+        # no per-layer expert resharding), FSDP dim on 'data'
+        if "moe" in keys and any(k in keys for k in ("gate", "up", "down")):
+            if len(s.shape) == 4:  # (layers, E, a, b)
+                dp = dp_axes(mesh)
+                e_ok = s.shape[1] % mesh.shape["model"] == 0
+                a_ok = s.shape[2] % _axis_size(mesh, dp) == 0
+                return P(
+                    None,
+                    "model" if e_ok else None,
+                    dp if a_ok else None,
+                    None,
+                )
+        return auto_pspec(s.shape, mesh, skip_dims=skip)
+
+    return jax.tree_util.tree_map_with_path(leaf, shapes)
+
+
+def cache_pspecs(shapes: Any, mesh: Mesh) -> Any:
+    """Decode caches: (layers, batch, ...) -> batch on DP, rest auto."""
+
+    def leaf(s):
+        if len(s.shape) >= 3:
+            return auto_pspec(s.shape, mesh, skip_dims=(0,), batch_dim=1)
+        return P(*([None] * len(s.shape)))
+
+    return jax.tree.map(leaf, shapes)
+
+
+def batch_pspecs(shapes: Any, mesh: Mesh, pure_dp: bool = False) -> Any:
+    """Input batches: dim 0 is the global batch. ``pure_dp`` plans spread the
+    batch over every mesh axis (model included) — small-arch hillclimb."""
+    if pure_dp:
+        all_axes = tuple(mesh.axis_names)
+
+        def leaf(s):
+            if s.shape[0] % math.prod(mesh.shape[a] for a in all_axes) == 0:
+                return P(all_axes, *([None] * (len(s.shape) - 1)))
+            return auto_pspec(
+                s.shape, mesh, batch_dim=0,
+                skip_dims=tuple(range(1, len(s.shape))),
+            )
+
+        return jax.tree.map(leaf, shapes)
+    return jax.tree.map(
+        lambda s: auto_pspec(
+            s.shape, mesh, batch_dim=0, skip_dims=tuple(range(1, len(s.shape)))
+        ),
+        shapes,
+    )
+
+
+def shardings(pspecs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

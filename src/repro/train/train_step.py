@@ -1,0 +1,85 @@
+"""Step factories: train_step / prefill_step / serve_step + input specs.
+
+These are what the launchers jit/lower; shardings come from
+train/sharding.py's auto policy.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(M.loss_fn)(params, cfg, batch)
+        params, opt_state = adamw_update(opt, grads, opt_state, params)
+        return params, opt_state, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, tokens, pos):
+        return M.serve_step(params, cfg, cache, tokens, pos)
+
+    return serve_step
+
+
+# ----------------------------------------------------------- input specs ---
+def cache_len_for(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """long_500k on windowed hybrids keeps the ring-buffer window only (the
+    sub-quadratic requirement); decode_32k keeps the full assigned cache."""
+    if shape.name == "long_500k" and cfg.window:
+        return cfg.window
+    return shape.seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    dt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train":
+        s_text = S - cfg.n_patches
+        specs = {
+            "tokens": f((B, s_text), jnp.int32),
+            "labels": f((B, s_text), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = f((B, cfg.n_patches, M.PATCH_DIM), dt)
+        return {"batch": specs}
+    if shape.kind == "prefill":
+        s_text = S - cfg.n_patches
+        specs = {"tokens": f((B, s_text), jnp.int32)}
+        if cfg.family == "vlm":
+            specs["patch_embeds"] = f((B, cfg.n_patches, M.PATCH_DIM), dt)
+        return {"batch": specs}
+    # decode: one new token against a cache of seq_len
+    clen = cache_len_for(cfg, shape)
+    cache = jax.eval_shape(lambda: tf.init_cache(cfg, B, clen, dt))
+    return {
+        "cache": cache,
+        "tokens": f((B, 1), jnp.int32),
+        "pos": f((), jnp.int32),
+    }
+
+
+def opt_specs(cfg: ArchConfig, opt: AdamWConfig):
+    pshapes = M.param_shapes(cfg)
+    return jax.eval_shape(lambda: adamw_init(opt, pshapes))

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run against 1 CPU device (dry-run sets its own 512-device flag in a
+# subprocess). A handful of distributed tests request 8 devices explicitly
+# via their own module-level guard BEFORE jax initialises; see
+# tests/test_distributed.py which must run in a separate process when needed.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

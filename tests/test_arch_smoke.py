@@ -1,0 +1,153 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward +
+one train step on CPU, asserting shapes and finiteness (assignment spec).
+Full configs are exercised only via the dry-run (no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base as configs
+from repro.models import model as M
+from repro.models import transformer as tf
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+ARCHS = [
+    "kimi-k2-1t-a32b",
+    "dbrx-132b",
+    "qwen2-72b",
+    "starcoder2-15b",
+    "stablelm-3b",
+    "gemma2-27b",
+    "qwen2-vl-7b",
+    "mamba2-780m",
+    "musicgen-medium",
+    "hymba-1.5b",
+]
+
+
+def _batch(cfg, B=2, S=32):
+    key = jax.random.PRNGKey(7)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(8), (B, cfg.n_patches, M.PATCH_DIM)
+        )
+    return batch
+
+
+def test_all_assigned_archs_registered():
+    assert sorted(configs.names()) == sorted(ARCHS)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_parameter_count(arch):
+    """Full configs build shape trees (no allocation) at the expected scale."""
+    cfg = configs.get(arch)
+    shapes = M.param_shapes(cfg)
+    total = sum(np.prod(s.shape) for s in jax.tree.leaves(shapes))
+    assert 0.5 * cfg.n_params <= total <= 1.5 * cfg.n_params
+    # headline sanity: kimi ~1T, qwen2 ~72B
+    if arch == "kimi-k2-1t-a32b":
+        assert total > 0.9e12
+    if arch == "qwen2-72b":
+        assert 6e10 < total < 8.5e10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = configs.reduced(configs.get(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    B, S = batch["tokens"].shape
+    total_seq = S + (cfg.n_patches if cfg.family == "vlm" else 0)
+
+    logits = M.forward(params, cfg, batch)
+    assert logits.shape == (B, total_seq, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), "NaN/inf in logits"
+
+    opt = AdamWConfig(lr=1e-3, warmup_steps=1)
+    state = adamw_init(opt, params)
+    loss0, grads = jax.value_and_grad(M.loss_fn)(params, cfg, batch)
+    assert np.isfinite(float(loss0))
+    params2, state = adamw_update(opt, grads, state, params)
+    loss1 = M.loss_fn(params2, cfg, batch)
+    assert np.isfinite(float(loss1))
+    # one step on the same batch should not blow up
+    assert float(loss1) < float(loss0) + 1.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_decode_matches_forward(arch):
+    cfg = configs.reduced(configs.get(arch))
+    if cfg.family == "vlm":
+        pytest.skip("vlm decode compares text positions only — covered below")
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    full = M.forward(params, cfg, {"tokens": toks})
+    cache = tf.init_cache(cfg, B, S, jnp.float32)
+    step = jax.jit(
+        lambda c, t, p: M.serve_step(params, cfg, c, t, p)
+    )
+    errs = []
+    for pos in range(S):
+        lg, cache = step(cache, toks[:, pos : pos + 1], jnp.asarray(pos))
+        errs.append(float(jnp.max(jnp.abs(lg - full[:, pos]))))
+    assert max(errs) < 5e-3, max(errs)
+
+
+def test_prefill_then_decode_continues_consistently():
+    cfg = configs.reduced(configs.get("stablelm-3b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, cfg.vocab)
+    full = M.forward(params, cfg, {"tokens": toks})
+    logits_pre, caches = M.prefill(params, cfg, {"tokens": toks[:, : S - 1]})
+    # prefill caches cover positions [0, S-1); pad to S and decode last token
+    def pad(c, name):
+        if name in ("k", "v"):
+            padder = jnp.zeros_like(c[:, :, :1])
+            return jnp.concatenate([c, padder], axis=2)
+        return c
+
+    cache = {
+        "k": pad(caches["k"], "k"),
+        "v": pad(caches["v"], "v"),
+        "kpos": jnp.concatenate(
+            [caches["kpos"], jnp.full((cfg.n_layers, B, 1), 2**30, jnp.int32)],
+            axis=2,
+        ),
+    }
+    lg, _ = M.serve_step(params, cfg, cache, toks[:, S - 1 :], jnp.asarray(S - 1))
+    err = float(jnp.max(jnp.abs(lg - full[:, S - 1])))
+    assert err < 5e-3, err
+    err_pre = float(jnp.max(jnp.abs(logits_pre - full[:, S - 2])))
+    assert err_pre < 5e-3, err_pre
+
+
+def test_gemma2_softcaps_bound_logits():
+    cfg = configs.reduced(configs.get("gemma2-27b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(5))
+    logits = M.forward(params, cfg, _batch(cfg))
+    assert float(jnp.max(jnp.abs(logits))) <= cfg.final_softcap + 1e-3
+
+
+def test_window_layers_alternate_gemma2():
+    cfg = configs.get("gemma2-27b")
+    w = np.asarray(tf.layer_windows(cfg))
+    assert w[0] == 4096 and w[1] == 0  # local, global alternating
+    cfg_h = configs.get("hymba-1.5b")
+    wh = np.asarray(tf.layer_windows(cfg_h))
+    assert (wh == 1024).all()  # all sliding-window
+
+
+def test_mamba2_chunked_equals_small_chunk():
+    """SSD invariance to chunk size (state-space duality consistency)."""
+    cfg8 = configs.reduced(configs.get("mamba2-780m"), ssm_chunk=8)
+    cfg16 = configs.reduced(configs.get("mamba2-780m"), ssm_chunk=16)
+    params = M.init_params(cfg8, jax.random.PRNGKey(6))
+    batch = _batch(cfg8)
+    l8 = M.forward(params, cfg8, batch)
+    l16 = M.forward(params, cfg16, batch)
+    np.testing.assert_allclose(np.asarray(l8), np.asarray(l16), atol=2e-3)

@@ -1,0 +1,84 @@
+"""§3.4 multi-arrival and §3.5 gang-scheduling extensions."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import extensions, graph, ogasched, reward
+from repro.sched import trace
+
+
+def test_multi_arrival_j1_equals_base():
+    cfg = trace.TraceConfig(T=100, L=6, R=12, K=4, seed=0)
+    spec, arr = trace.make(cfg)
+    espec, x_exp = extensions.expand_multi_arrival(spec, arr.astype(jnp.int32), J=1)
+    np.testing.assert_allclose(np.asarray(x_exp), np.asarray(arr), atol=0)
+    r_base, _ = ogasched.run(spec, arr, eta0=10.0)
+    r_exp, _ = ogasched.run(espec, x_exp, eta0=10.0)
+    np.testing.assert_allclose(
+        np.asarray(r_base), np.asarray(r_exp), rtol=1e-4, atol=1e-3
+    )
+
+
+def test_multi_arrival_counts_expand_correctly():
+    cfg = trace.TraceConfig(T=50, L=4, R=8, K=3, seed=1)
+    spec = trace.build_spec(cfg)
+    arr = trace.build_arrivals(cfg, multi=True)  # Poisson counts
+    J = int(jnp.max(arr))
+    espec, x_exp = extensions.expand_multi_arrival(spec, arr, J=J)
+    assert espec.L == spec.L * J
+    # virtual port (l, j) active iff j <= x_l(t)
+    t, l = 11, 2
+    cnt = int(arr[t, l])
+    row = np.asarray(x_exp[t]).reshape(spec.L, J)[l]
+    assert row.sum() == min(cnt, J)
+    assert np.all(row[: min(cnt, J)] == 1)
+
+
+def test_multi_arrival_run_feasible_and_learns():
+    cfg = trace.TraceConfig(T=300, L=5, R=10, K=4, seed=2)
+    spec = trace.build_spec(cfg)
+    arr = trace.build_arrivals(cfg, multi=True)
+    J = int(jnp.max(arr))
+    espec, x_exp = extensions.expand_multi_arrival(spec, arr, J=J)
+    rewards, y_final = ogasched.run(espec, x_exp, eta0=15.0)
+    assert bool(graph.feasible(espec, y_final))
+    r = np.asarray(rewards)
+    assert r[-50:].mean() > r[:50].mean()
+
+
+def _gang_setup(seed=0):
+    cfg = trace.TraceConfig(T=40, L=4, R=10, K=3, seed=seed)
+    spec = trace.build_spec(cfg)
+    rng = np.random.default_rng(seed)
+    Q = 3
+    task_req = rng.uniform(0.5, 3.0, (spec.L, Q, spec.K))
+    task_req[0, 2] = 0.0  # port 0 only has 2 tasks
+    espec, port_of_task, valid = extensions.expand_gang(spec, task_req)
+    m_min = jnp.asarray([2.0, 2.0, 1.0, 3.0])
+    return spec, espec, port_of_task, valid, m_min
+
+
+def test_gang_repair_enforces_all_or_nothing():
+    spec, espec, pot, valid, m_min = _gang_setup()
+    key = jax.random.PRNGKey(0)
+    y = graph.random_feasible_decision(espec, key)
+    # zero out most tasks of port 3 so it falls below m_3 = 3
+    y = y.at[9:12].set(y[9:12] * jnp.asarray([1.0, 0.0, 0.0])[:, None, None])
+    y2 = extensions.gang_repair(espec, y, pot, m_min, spec.L)
+    alloc = np.asarray(jnp.sum(y2, axis=(1, 2))).reshape(spec.L, 3)
+    n_sched = (alloc > 1e-6).sum(1)
+    for l in range(spec.L):
+        assert n_sched[l] == 0 or n_sched[l] >= float(m_min[l])
+
+
+def test_gang_oga_steps_stay_feasible():
+    spec, espec, pot, valid, m_min = _gang_setup(seed=3)
+    y = jnp.zeros((espec.L, espec.R, espec.K))
+    x = jnp.ones(spec.L)
+    eta = jnp.asarray(5.0)
+    for _ in range(5):
+        y, q = extensions.gang_oga_step(espec, x, y, eta, pot, m_min, spec.L)
+        assert bool(graph.feasible(espec, y))
+    assert np.isfinite(float(q))

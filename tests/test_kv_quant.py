@@ -1,0 +1,52 @@
+"""int8 KV-cache quantisation (decode memory-term optimisation, §Perf)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as configs
+from repro.models import model as M
+from repro.models import transformer as tf
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8, 2, 16))
+    q, s = tf.quantize_kv(x)
+    back = tf.dequantize_kv(q, s, jnp.float32)
+    rel = float(jnp.max(jnp.abs(back - x)) / jnp.max(jnp.abs(x)))
+    assert q.dtype == jnp.int8
+    assert rel < 1.5 / 127  # one quantisation step per-(token, head)
+
+
+def test_int8_decode_tracks_forward():
+    cfg = dataclasses.replace(
+        configs.reduced(configs.get("stablelm-3b")), kv_cache_quant=True
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    full = M.forward(params, cfg, {"tokens": toks})
+    cache = tf.init_cache(cfg, B, S, jnp.float32)
+    assert cache["k"].dtype == jnp.int8 and "k_scale" in cache
+    step = jax.jit(lambda c, t, p: M.serve_step(params, cfg, c, t, p))
+    errs, agree = [], 0
+    for pos in range(S):
+        lg, cache = step(cache, toks[:, pos : pos + 1], jnp.asarray(pos))
+        errs.append(float(jnp.max(jnp.abs(lg - full[:, pos]))))
+        agree += int(
+            (jnp.argmax(lg, -1) == jnp.argmax(full[:, pos], -1)).all()
+        )
+    assert max(errs) < 0.5, max(errs)  # int8 tolerance
+    assert agree >= S - 1  # greedy decisions essentially unchanged
+
+
+def test_prefill_emits_quantised_cache():
+    cfg = dataclasses.replace(
+        configs.reduced(configs.get("stablelm-3b")), kv_cache_quant=True
+    )
+    params = M.init_params(cfg, jax.random.PRNGKey(3))
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 8), 0, cfg.vocab)
+    _, caches = M.prefill(params, cfg, {"tokens": toks})
+    assert caches["k"].dtype == jnp.int8
+    assert caches["k_scale"].shape == caches["k"].shape[:-1]

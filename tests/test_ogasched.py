@@ -1,0 +1,78 @@
+"""OGASCHED behaviour: feasibility, learning, regret vs Thm. 1 bound."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, graph, ogasched, regret
+from repro.sched import trace
+
+
+def _run(T=400, seed=0, **kw):
+    cfg = trace.TraceConfig(T=T, L=8, R=24, K=6, seed=seed, **kw)
+    spec, arr = trace.make(cfg)
+    rewards, y_final, traj = ogasched.run(
+        spec, arr, eta0=25.0, decay=0.9999, return_traj=True
+    )
+    return cfg, spec, arr, rewards, y_final, traj
+
+
+def test_iterates_always_feasible():
+    _, spec, _, _, _, traj = _run(T=120)
+    for t in range(0, 120, 10):
+        assert bool(graph.feasible(spec, traj[t])), f"infeasible at t={t}"
+
+
+def test_learning_improves_average_reward():
+    _, _, _, rewards, _, _ = _run(T=600)
+    r = np.asarray(rewards)
+    early = r[:100].mean()
+    late = r[-100:].mean()
+    assert late > early, (early, late)
+
+
+def test_regret_below_theorem1_bound():
+    cfg, spec, arr, rewards, _, _ = _run(T=400)
+    y_star = regret.offline_optimum(spec, arr, iters=800)
+    assert bool(graph.feasible(spec, y_star))
+    r = float(regret.regret(spec, arr, rewards, y_star))
+    bound = float(regret.regret_bound(spec, cfg.T))
+    assert r <= bound, (r, bound)
+
+
+def test_regret_curve_sublinear():
+    """Fit R_t ~ t^p on the tail; expect p well below 1 (Thm. 1: p=1/2)."""
+    cfg, spec, arr, rewards, _, _ = _run(T=1200)
+    y_star = regret.offline_optimum(spec, arr, iters=800)
+    curve = np.asarray(regret.regret_curve(spec, arr, rewards, y_star))
+    t = np.arange(1, len(curve) + 1)
+    pos = curve > 1.0
+    tail = pos & (t > 100)
+    if tail.sum() > 50:  # only meaningful when regret is positive
+        p = np.polyfit(np.log(t[tail]), np.log(curve[tail]), 1)[0]
+        assert p < 0.95, p
+    else:  # negative regret == even better than the comparator
+        assert curve[-1] <= float(regret.regret_bound(spec, cfg.T))
+
+
+def test_outperforms_all_baselines():
+    cfg = trace.TraceConfig(T=800, L=10, R=64, K=6, seed=1, contention=10.0)
+    spec, arr = trace.make(cfg)
+    rewards, _ = ogasched.run(spec, arr, eta0=25.0, decay=0.9999)
+    oga = float(jnp.mean(rewards))
+    for name in baselines.BASELINES:
+        base = float(jnp.mean(baselines.run(spec, arr, name)))
+        assert oga > base, (name, oga, base)
+
+
+def test_eta_theoretical_positive_finite():
+    spec = trace.build_spec(trace.TraceConfig(L=5, R=12, K=4, seed=0))
+    eta = float(ogasched.eta_theoretical(spec, 1000))
+    assert 0 < eta < 1e6 and np.isfinite(eta)
+
+
+def test_zero_arrivals_zero_reward():
+    cfg = trace.TraceConfig(T=50, L=4, R=8, K=3, seed=0)
+    spec = trace.build_spec(cfg)
+    arr = jnp.zeros((50, 4))
+    rewards, _ = ogasched.run(spec, arr, eta0=25.0)
+    np.testing.assert_allclose(np.asarray(rewards), 0.0, atol=1e-5)

@@ -1,0 +1,104 @@
+"""Fast projection correctness: bisection == exact == paper Alg. 1, KKT."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projection as proj
+from repro.core import graph
+from repro.sched import trace
+
+
+def _rand_cell(rng, n):
+    z = rng.normal(0, 5, n)
+    a = rng.uniform(0.05, 4.0, n)
+    c = rng.uniform(0.2, 8.0)
+    return z, a, c
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_exact_vs_alg1(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(100):
+        n = rng.integers(1, 12)
+        z, a, c = _rand_cell(rng, n)
+        np.testing.assert_allclose(
+            proj.project_exact_np(z, a, c),
+            proj.project_alg1_np(z, a, c),
+            atol=1e-8,
+        )
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_exact_satisfies_kkt(seed):
+    """KKT system (eq. 34): feasibility + stationarity + compl. slackness."""
+    rng = np.random.default_rng(seed)
+    n = rng.integers(1, 10)
+    z, a, c = _rand_cell(rng, n)
+    y = proj.project_exact_np(z, a, c)
+    assert np.all(y >= -1e-9) and np.all(y <= a + 1e-9)
+    assert y.sum() <= c + 1e-6
+    tau = 0.0
+    if y.sum() >= c - 1e-9:  # capacity tight => common tau on interior set
+        interior = (y > 1e-9) & (y < a - 1e-9)
+        if interior.any():
+            taus = z[interior] - y[interior]
+            assert np.ptp(taus) < 1e-6
+            tau = float(taus.mean())
+            assert tau >= -1e-7  # rho = 2 tau >= 0
+    # stationarity per coordinate
+    for i in range(n):
+        if y[i] < 1e-9:  # at zero: z_i - tau <= 0
+            assert z[i] - tau <= 1e-6
+        elif y[i] > a[i] - 1e-9:  # at cap: z_i - tau >= a_i
+            assert z[i] - tau >= a[i] - 1e-6
+
+
+def test_bisection_matches_exact_cluster():
+    spec = trace.build_spec(trace.TraceConfig(L=7, R=17, K=6, seed=3))
+    key = jax.random.PRNGKey(0)
+    z = jax.random.normal(key, (spec.L, spec.R, spec.K)) * 30.0
+    got = np.asarray(proj.project(spec, z))
+    want = proj.project_cluster_np(spec, np.asarray(z), method="exact")
+    np.testing.assert_allclose(got, want, atol=5e-4)
+
+
+def test_projection_idempotent():
+    spec = trace.build_spec(trace.TraceConfig(L=5, R=9, K=4, seed=1))
+    z = jax.random.normal(jax.random.PRNGKey(1), (5, 9, 4)) * 10.0
+    p1 = proj.project(spec, z)
+    p2 = proj.project(spec, p1)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), atol=2e-5)
+    assert bool(graph.feasible(spec, p1))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_projection_nonexpansive(seed):
+    """||P(x) - P(y)|| <= ||x - y|| — the property Thm. 1's proof rests on."""
+    spec = trace.build_spec(trace.TraceConfig(L=4, R=6, K=3, seed=0))
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (4, 6, 3)) * 15.0
+    y = jax.random.normal(ky, (4, 6, 3)) * 15.0
+    px, py = proj.project(spec, x), proj.project(spec, y)
+    lhs = float(jnp.linalg.norm((px - py).ravel()))
+    rhs = float(jnp.linalg.norm(((x - y) * spec.mask[:, :, None]).ravel()))
+    assert lhs <= rhs + 1e-4
+
+
+def test_dtype_sweep():
+    spec = trace.build_spec(trace.TraceConfig(L=4, R=8, K=3, seed=2))
+    z32 = jax.random.normal(jax.random.PRNGKey(2), (4, 8, 3)) * 10.0
+    want = proj.project_cluster_np(spec, np.asarray(z32), method="exact")
+    for dt, tol in [(jnp.float32, 5e-4), (jnp.float64, 5e-4), (jnp.bfloat16, 0.25)]:
+        got = proj.project_bisection(
+            z32.astype(dt),
+            spec.a.astype(dt),
+            spec.c.astype(dt),
+            spec.mask.astype(dt),
+        )
+        np.testing.assert_allclose(
+            np.asarray(got, np.float64), want, atol=tol
+        )

@@ -1,0 +1,81 @@
+"""Auto-sharding policy unit tests (no devices needed — pure PartitionSpec
+logic over ShapeDtypeStructs and a fake mesh object)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import base as configs
+from repro.models import model as M
+from repro.train import sharding as shd
+
+
+class FakeMesh:
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_auto_pspec_tp_then_fsdp():
+    # (vocab, d): vocab -> model (largest), d -> data
+    p = shd.auto_pspec((163840, 7168), SINGLE)
+    assert p == P("model", ("data",))
+
+
+def test_auto_pspec_skips_nondivisible_heads():
+    # qwen2-vl: 28 heads not divisible by 16 -> falls through to d_model
+    p = shd.auto_pspec((3584, 28, 128), SINGLE)
+    assert p[0] == "model"  # 3584 = 16*224
+    assert p[1] is None
+
+
+def test_auto_pspec_multi_pod_batch():
+    p = shd.auto_pspec((256, 4096), MULTI, batch_dim=0,
+                       skip_dims=(1,))
+    assert p[0] == ("pod", "data")
+
+
+def test_auto_pspec_batch_fallback_when_indivisible():
+    # batch 1 (long_500k): nothing fits -> replicated
+    p = shd.auto_pspec((1, 524288), MULTI, batch_dim=0, skip_dims=(1,))
+    assert p[0] is None
+
+
+def test_param_pspecs_blocks_skip_layer_dim():
+    cfg = configs.get("qwen2-72b")
+    shapes = M.param_shapes(cfg)
+    specs = shd.param_pspecs(shapes, SINGLE)
+    wq = specs["blocks"]["attn"]["wq"]  # (80, 8192, 8192)
+    assert wq[0] is None  # scan dim never sharded
+
+
+def test_param_pspecs_moe_experts_on_model():
+    cfg = configs.get("kimi-k2-1t-a32b")
+    shapes = M.param_shapes(cfg)
+    specs = shd.param_pspecs(shapes, SINGLE)
+    gate = specs["blocks"]["moe"]["gate"]  # (61, 384, 7168, 2048)
+    assert gate == P(None, "model", ("data",), None)
+
+
+def test_every_arch_fully_specced():
+    """Auto policy yields a valid spec for every leaf of every arch."""
+    for name in configs.names():
+        shapes = M.param_shapes(configs.get(name))
+        specs = shd.param_pspecs(shapes, MULTI)
+        for leaf, spec in zip(
+            jax.tree.leaves(shapes),
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)),
+        ):
+            assert isinstance(spec, P)
+            # each assigned dim must divide
+            for dim, axes in enumerate(spec):
+                if axes is None:
+                    continue
+                axes = (axes,) if isinstance(axes, str) else axes
+                size = int(np.prod([MULTI.shape[a] for a in axes]))
+                assert leaf.shape[dim] % size == 0, (name, leaf.shape, spec)

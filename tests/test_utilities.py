@@ -1,0 +1,59 @@
+"""Utility family invariants (paper eq. 51, Def. 1 nice setup)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import utilities as U
+
+KINDS = list(U.KIND_NAMES)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_zero_startup(kind):
+    alpha = jnp.asarray([1.0, 1.2, 1.5])
+    v = U.util_value(jnp.asarray(kind), alpha, jnp.zeros(3))
+    np.testing.assert_allclose(np.asarray(v), 0.0, atol=1e-7)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_monotone_nondecreasing(kind):
+    alpha = jnp.asarray(1.3)
+    y = jnp.linspace(0.0, 50.0, 400)
+    v = U.util_value(jnp.asarray(kind), alpha, y)
+    assert np.all(np.diff(np.asarray(v)) >= -1e-6)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_concave(kind):
+    alpha = jnp.asarray(1.1)
+    y = jnp.linspace(0.0, 50.0, 400)
+    v = np.asarray(U.util_value(jnp.asarray(kind), alpha, y))
+    second = np.diff(v, 2)
+    assert np.all(second <= 1e-5)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_grad_matches_autodiff(kind):
+    alpha = jnp.asarray(1.25)
+    f = lambda y: U.util_value(jnp.asarray(kind), alpha, y)
+    for y0 in [0.1, 1.0, 7.3, 42.0]:
+        got = U.util_grad(jnp.asarray(kind), alpha, jnp.asarray(y0))
+        want = jax.grad(f)(jnp.asarray(y0))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@given(
+    kind=st.sampled_from(KINDS),
+    alpha=st.floats(1.0, 1.5),
+    y=st.floats(0.0, 100.0),
+)
+@settings(max_examples=80, deadline=None)
+def test_grad_bounded_by_varpi(kind, alpha, y):
+    """(f_r^k)'(y) <= (f_r^k)'(0) <= varpi (eq. 13 + concavity)."""
+    a = jnp.asarray(alpha)
+    k = jnp.asarray(kind)
+    g = float(U.util_grad(k, a, jnp.asarray(y)))
+    w0 = float(U.util_grad_at_zero(k, a))
+    assert g <= w0 + 1e-6

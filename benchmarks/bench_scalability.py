@@ -1,9 +1,55 @@
-"""Paper Fig. 3: scalability over |R|, |L| and contention level."""
+"""Paper Fig. 3: scalability over |R|, |L| and contention level, plus the
+fused-vs-reference single-config OGA step timing (kernels.ops backend
+switch: one fused VMEM pass vs grad/ascent/projection round-trips)."""
 from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.sched import trace
 from repro.sched.simulator import improvement_over_baselines, run_all
+
+
+def run_backends(quick: bool = True):
+    """Per-step update timing: reference (three passes) vs the fused kernel's
+    packed-row path. Off-TPU the fused number uses the pure-jnp packed oracle
+    (interpret-mode Pallas would time the interpreter, not the data path)."""
+    from repro.core import graph
+    from repro.kernels import ops
+
+    on_tpu = jax.default_backend() == "tpu"
+    reps = 30 if quick else 200
+    for L, R, K in [(10, 128, 6)] if quick else [(10, 128, 6), (20, 512, 6)]:
+        spec = trace.build_spec(trace.TraceConfig(L=L, R=R, K=K, seed=0))
+        y = graph.random_feasible_decision(spec, jax.random.PRNGKey(0))
+        x = jnp.ones((L,))
+        eta = jnp.asarray(3.0)
+
+        # Both sides time the FULL production update (kstar, packing, eta
+        # concat, unpack included) — only the kernel dispatch differs.
+        operands = ops.pack_spec_operands(spec)
+        ref_step = jax.jit(
+            lambda yy: ops.oga_update_spec(spec, yy, x, eta, backend="reference")
+        )
+        fused_step = jax.jit(
+            lambda yy: ops.oga_update_spec(
+                spec, yy, x, eta, backend="fused", operands=operands,
+                use_pallas=on_tpu,
+            )
+        )
+
+        for name, step in [("reference", ref_step), ("fused", fused_step)]:
+            out = jax.block_until_ready(step(y))  # warm
+            t0 = time.time()
+            for _ in range(reps):
+                out = step(y)
+            jax.block_until_ready(out)
+            us = (time.time() - t0) / reps * 1e6
+            emit(f"oga_step.{name}.L={L}.R={R}.K={K}", us,
+                 f"backend={'pallas' if on_tpu else 'jnp'}")
 
 
 def run(quick: bool = True):
@@ -26,6 +72,7 @@ def run(quick: bool = True):
         gaps = improvement_over_baselines(res)
         emit(f"fig3c.contention={cont}", 0.0,
              f"oga={res['ogasched'].avg_reward:.1f};min_gap={min(gaps.values()):+.2f}%")
+    run_backends(quick)
 
 
 if __name__ == "__main__":

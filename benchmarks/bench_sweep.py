@@ -1,0 +1,71 @@
+"""Scenario-sweep throughput: one vmapped grid vs looping the simulator.
+
+Emits configs/sec for ``sweep.run_grid`` (the whole (eta0, decay, seed, rho)
+grid as a single jitted computation) against the old one-config-at-a-time
+``run_all`` loop, both measured warm (compile excluded).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.sched import sweep, trace
+from repro.sched.simulator import run_all
+
+
+def _block(tree):
+    return jax.block_until_ready(jax.tree.leaves(tree)[0])
+
+
+def run(quick: bool = True):
+    T = 200 if quick else 1000
+    R = 32 if quick else 128
+    base = trace.TraceConfig(T=T, L=8, R=R, K=6)
+    points = sweep.make_grid(
+        base,
+        eta0s=(10.0, 25.0),
+        decays=(0.999, 0.9999),
+        seeds=(0, 7),
+        rhos=(0.5, 0.9),
+    )
+    G = len(points)
+
+    _block(sweep.run_grid(sweep.build_batch(points)))  # warm (compile)
+    # Timed region includes build_batch's host-side trace generation so the
+    # comparison is fair: run_all regenerates traces inside the loop too.
+    t0 = time.time()
+    rewards = sweep.run_grid(sweep.build_batch(points))
+    _block(rewards)
+    t_grid = time.time() - t0
+
+    p0 = points[0]
+    run_all(p0.cfg, eta0=p0.eta0, decay=p0.decay)  # warm the loop path
+    t0 = time.time()
+    loop_avg = []
+    for p in points:
+        res = run_all(p.cfg, eta0=p.eta0, decay=p.decay)
+        loop_avg.append(res["ogasched"].avg_reward)
+    t_loop = time.time() - t0
+
+    grid_avg = sweep.summarize(
+        {k: np.asarray(v) for k, v in rewards.items()}
+    )["avg/ogasched"]
+    np.testing.assert_allclose(grid_avg, np.asarray(loop_avg), rtol=1e-4)
+
+    emit(
+        f"sweep.run_grid.G={G}.T={T}.R={R}",
+        t_grid * 1e6 / G,
+        f"configs_per_s={G / t_grid:.2f};speedup_vs_loop={t_loop / t_grid:.2f}x",
+    )
+    emit(
+        f"sweep.loop_run_all.G={G}.T={T}.R={R}",
+        t_loop * 1e6 / G,
+        f"configs_per_s={G / t_loop:.2f}",
+    )
+
+
+if __name__ == "__main__":
+    run()

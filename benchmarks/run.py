@@ -26,6 +26,7 @@ def main() -> None:
         bench_reward,
         bench_roofline,
         bench_scalability,
+        bench_sweep,
         bench_utilities,
     )
 
@@ -38,6 +39,7 @@ def main() -> None:
         ("fig6_contention", lambda: bench_contention.run(quick)),
         ("fig7_utilities", lambda: bench_utilities.run(quick)),
         ("thm1_regret", lambda: bench_regret.run(quick)),
+        ("sweep_throughput", lambda: bench_sweep.run(quick)),
         ("kernels", lambda: bench_kernels.run(quick)),
         ("roofline", bench_roofline.run),
     ]

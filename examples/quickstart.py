@@ -21,3 +21,16 @@ for name, pct in improvement_over_baselines(results).items():
 oga = results["ogasched"]
 print(f"\nregret R_T = {oga.regret:.1f}  <=  H_G*sqrt(T) = {oga.regret_bound:.1f} "
       f"({'OK' if oga.regret <= oga.regret_bound else 'VIOLATION'})")
+
+# --- scenario sweep: a hyperparameter grid as ONE vmapped computation ------
+# (docs/sweeps.md; sweep.run_grid matches looping run_all per config.)
+from repro.sched import sweep
+
+points = sweep.make_grid(cfg, eta0s=(10.0, 25.0), decays=(0.999, 0.9999))
+batch = sweep.build_batch(points)
+summary = sweep.summarize(sweep.run_grid(batch, algorithms=("ogasched", "fairness")))
+print(f"\nsweep over {batch.size} configs (eta0 x decay):")
+for p, avg, imp in zip(points, summary["avg/ogasched"],
+                       summary["improvement_pct/fairness"]):
+    print(f"  eta0={p.eta0:5.1f} decay={p.decay:6.4f}  "
+          f"avg_reward={avg:8.2f}  vs fairness {imp:+.2f}%")

@@ -1,0 +1,34 @@
+"""JAX API-drift shims.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and renamed ``check_rep`` to ``check_vma`` along the way; this wrapper accepts
+the new-style call on either version. ``set_mesh`` falls back to the Mesh
+context manager that predates it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def set_mesh(mesh):
+    """``jax.set_mesh(mesh)`` on new jax, ``with mesh:`` on old."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+_native = getattr(jax, "shard_map", None)
+if _native is None:
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    kw = {}
+    if _native is not None:
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return _native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    return _experimental_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+    )

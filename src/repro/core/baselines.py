@@ -147,3 +147,10 @@ def run(
 
     _, rewards = jax.lax.scan(body, None, arrivals)
     return rewards
+
+
+@partial(jax.jit, static_argnames=("name",))
+def run_batch(specs: ClusterSpec, arrivals: jax.Array, name: str):
+    """Vectorised entry point for scenario sweeps (sched.sweep): ``specs``
+    leaves and ``arrivals`` carry a leading grid axis; returns (G, T)."""
+    return jax.vmap(lambda s, a: run(s, a, name))(specs, arrivals)

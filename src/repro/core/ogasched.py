@@ -8,8 +8,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import projection, reward
+from repro.core import reward
 from repro.core.graph import ClusterSpec, random_feasible_decision
+from repro.kernels import ops
 
 
 @jax.tree_util.register_dataclass
@@ -36,46 +37,57 @@ def oga_step(
     spec: ClusterSpec,
     state: OGAState,
     x: jax.Array,
-    decay: float,
+    decay: float | jax.Array,
     proj_iters: int = 64,
+    backend: str = "reference",
+    operands=None,
 ) -> tuple[OGAState, jax.Array]:
     """One slot: observe x(t), collect q(x(t), y(t)), ascend, project.
 
+    ``backend`` selects the update implementation (kernels.ops): "reference"
+    runs grad (eq. 30) -> ascent (Alg. 1 step 5) -> projection (steps 6-31)
+    as separate passes; "fused" runs the single-pass Pallas kernel.
     Returns (next_state, reward_at_t).
     """
     q_t = reward.total_reward(spec, x, state.y)
-    g = reward.reward_grad(spec, x, state.y)           # eq. 30
-    z = state.y + state.eta * g                        # Alg. 1 step 5
-    y_next = projection.project(spec, z, iters=proj_iters)  # steps 6-31
+    y_next = ops.oga_update_spec(
+        spec, state.y, x, state.eta,
+        backend=backend, proj_iters=proj_iters, operands=operands,
+    )
     new = OGAState(y=y_next, eta=state.eta * decay, t=state.t + 1)
     return new, q_t
 
 
-@partial(jax.jit, static_argnames=("decay", "proj_iters", "return_traj"))
+@partial(jax.jit, static_argnames=("proj_iters", "return_traj", "backend"))
 def run(
     spec: ClusterSpec,
     arrivals: jax.Array,
     eta0: float | jax.Array,
-    decay: float = 0.9999,
+    decay: float | jax.Array = 0.9999,
     proj_iters: int = 64,
     y0: Optional[jax.Array] = None,
     return_traj: bool = False,
+    backend: str = "auto",
 ):
     """Run OGASCHED over an arrival trajectory.
 
     Args:
       arrivals: (T, L) arrival indicators (or counts via §3.4 expansion).
       eta0, decay: initial learning rate and decay lambda (paper Tab. 2).
+        Both may be traced arrays, so hyperparameter grids vmap (sched.sweep).
+      backend: "fused" | "reference" | "auto" — see kernels.ops.oga_update_spec.
     Returns:
       rewards: (T,) per-slot rewards q(x(t), y(t)).
       y_final: (L, R, K); plus the full trajectory if ``return_traj``.
     """
+    backend = ops.resolve_oga_backend(backend)
     state = init_state(spec, eta0)
     if y0 is not None:
         state = dataclasses.replace(state, y=y0)
+    operands = ops.pack_spec_operands(spec) if backend == "fused" else None
 
     def body(s, x):
-        s2, q_t = oga_step(spec, s, x, decay, proj_iters)
+        s2, q_t = oga_step(spec, s, x, decay, proj_iters, backend, operands)
         out = (q_t, s2.y) if return_traj else (q_t, jnp.zeros((), s2.y.dtype))
         return s2, out
 

@@ -1,19 +1,130 @@
 """Jit'd dispatch wrappers: Pallas on TPU, interpret-mode elsewhere, with the
-pure-jnp oracle available for A/B (config flag ``use_pallas_kernels``)."""
+pure-jnp oracle available for A/B (config flag ``use_pallas_kernels``).
+
+Also home of the spec-level OGA backend switch (``oga_update_spec``) and the
+(L, R, K) <-> (N = R*K, L) row-layout converters the fused kernel needs: row
+n = cell (r, k), lanes = ports. Packing is a transpose + reshape, so the
+round-trip is exact.
+"""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
+from repro.core import projection as _projection
+from repro.core import reward as _reward
 from repro.kernels import flash_attention as _fa
 from repro.kernels import oga_step as _og
 from repro.kernels import proj_bisect as _pb
 from repro.kernels import ref as _ref
+
+OGA_BACKENDS = ("auto", "fused", "reference")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def resolve_oga_backend(backend: str = "auto") -> str:
+    """"auto" -> fused kernel on TPU, unfused reference elsewhere (interpret
+    mode makes the fused kernel correct on CPU but not fast)."""
+    if backend not in OGA_BACKENDS:
+        raise ValueError(f"backend must be one of {OGA_BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        return "fused" if _on_tpu() else "reference"
+    return backend
+
+
+# ------------------------------------------------------------- row layout --
+def pack_rows(t: jax.Array) -> jax.Array:
+    """(L, R, K) decision tensor -> (R*K, L) kernel rows."""
+    L, R, K = t.shape
+    return t.transpose(1, 2, 0).reshape(R * K, L)
+
+
+def unpack_rows(rows: jax.Array, L: int, R: int, K: int) -> jax.Array:
+    """(R*K, L) kernel rows -> (L, R, K) decision tensor."""
+    return rows.reshape(R, K, L).transpose(2, 0, 1)
+
+
+def pack_spec_operands(spec):
+    """Static fused-kernel operands for a ClusterSpec.
+
+    Returns (a_rows, mask_rows, scal_static): per-row channel caps and
+    adjacency (N, L), plus the [alpha, beta, c, kind] columns of the kernel's
+    packed-scalar operand (N, 4) — eta is appended per step since it decays.
+    """
+    L, R, K = spec.L, spec.R, spec.K
+    a_rows = jnp.broadcast_to(spec.a.T[None], (R, K, L)).reshape(R * K, L)
+    mask_rows = jnp.broadcast_to(spec.mask.T[:, None], (R, K, L)).reshape(R * K, L)
+    scal_static = jnp.stack(
+        [
+            spec.alpha.reshape(-1),
+            jnp.broadcast_to(spec.beta[None], (R, K)).reshape(-1),
+            spec.c.reshape(-1),
+            jnp.broadcast_to(spec.kinds[None], (R, K)).reshape(-1).astype(spec.a.dtype),
+        ],
+        axis=1,
+    )
+    return a_rows, mask_rows, scal_static
+
+
+def oga_update_spec(
+    spec,
+    y: jax.Array,
+    x: jax.Array,
+    eta: jax.Array,
+    *,
+    backend: str = "auto",
+    proj_iters: int = 64,
+    operands=None,
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """One OGA slot update y -> y(t+1) at the (L, R, K) spec level.
+
+    backend:
+      "reference" — grad (eq. 30), ascent, bisection projection as three
+                    separate (L, R, K) passes (three HBM round-trips).
+      "fused"     — the single-pass Pallas kernel over packed (R*K, L) rows;
+                    real Pallas on TPU, interpret mode elsewhere. proj_iters
+                    is fixed at the kernel's compiled iteration count.
+      "auto"      — fused on TPU, reference elsewhere.
+
+    ``operands`` optionally carries ``pack_spec_operands(spec)`` so a scan
+    body does not rebuild the static rows every step. ``use_pallas=False``
+    swaps the fused kernel for its packed-row jnp oracle (same data path,
+    no Pallas interpreter) — benchmarking off-TPU; default keeps Pallas.
+    """
+    backend = resolve_oga_backend(backend)
+    if backend == "reference":
+        g = _reward.reward_grad(spec, x, y)
+        return _projection.project(spec, y + eta * g, iters=proj_iters)
+
+    L, R, K = spec.L, spec.R, spec.K
+    a_rows, mask_rows, scal_static = (
+        pack_spec_operands(spec) if operands is None else operands
+    )
+    y_rows = pack_rows(y)
+    # k*_l = argmax_k beta_k sum_r y_(l,r)^k (eq. 27) — same first-index tie
+    # rule as reward_grad, computed once at the spec level then broadcast.
+    s = jnp.sum(y * spec.mask[:, :, None], axis=1)  # (L, K)
+    kstar = jax.nn.one_hot(jnp.argmax(spec.beta[None] * s, axis=1), K, dtype=y.dtype)
+    kstar_rows = jnp.broadcast_to(kstar.T[None], (R, K, L)).reshape(R * K, L)
+    x_rows = jnp.broadcast_to(x.astype(y.dtype)[None], (R * K, L))
+    scal = jnp.concatenate(
+        [scal_static, jnp.full((R * K, 1), eta, scal_static.dtype)], axis=1
+    )
+    if use_pallas is None or use_pallas:
+        rows = _og.oga_step_fused(
+            y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal,
+            interpret=not _on_tpu(),
+        )
+    else:
+        rows = _ref.oga_step_ref(y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal)
+    return unpack_rows(rows, L, R, K)
+
+
+# ------------------------------------------------------- kernel dispatchers --
 def proj_bisect(z, a, mask, c, *, use_pallas: bool | None = None):
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:

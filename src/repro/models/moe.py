@@ -13,6 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.models.layers import he_init
 from repro.train.meshctx import constrain
 
@@ -176,7 +178,7 @@ def apply_moe_ep(p, x, cfg, mesh):
         p_specs["shared"] = {k: P(None, None) for k in p["shared"]}
 
     @functools.partial(
-        jax.shard_map,
+        compat.shard_map,
         mesh=mesh,
         in_specs=(p_specs, x_spec),
         out_specs=x_spec,
@@ -231,7 +233,7 @@ def apply_mlp_ep(p, x, cfg, mesh):
                "down": P("model", None)}
 
     @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=(p_specs, x_spec),
+        compat.shard_map, mesh=mesh, in_specs=(p_specs, x_spec),
         out_specs=x_spec, check_vma=False,
     )
     def f(p_local, x_local):

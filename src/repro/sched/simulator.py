@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines, graph, ogasched, regret
-from repro.sched import trace
+from repro.sched import sweep, trace
 
 
 @dataclasses.dataclass
@@ -31,7 +31,12 @@ def run_all(
     algorithms: tuple = ("ogasched",) + baselines.BASELINES,
     with_regret: bool = False,
     oracle_iters: int = 2000,
+    backend: str = "auto",
+    proj_iters: int = 64,
 ) -> dict[str, SimResult]:
+    """Single-configuration comparison; each algorithm goes through the same
+    ``sweep.run_algorithm`` path the vectorised grid uses (sched.sweep), so
+    run_all on one config and run_grid on G configs agree by construction."""
     spec, arrivals = trace.make(cfg)
     out: dict[str, SimResult] = {}
     y_star = None
@@ -39,10 +44,10 @@ def run_all(
         y_star = regret.offline_optimum(spec, arrivals, iters=oracle_iters)
     for name in algorithms:
         t0 = time.time()
-        if name == "ogasched":
-            rewards, _ = ogasched.run(spec, arrivals, eta0=eta0, decay=decay)
-        else:
-            rewards = baselines.run(spec, arrivals, name)
+        rewards = sweep.run_algorithm(
+            spec, arrivals, name,
+            eta0=eta0, decay=decay, proj_iters=proj_iters, backend=backend,
+        )
         rewards = np.asarray(jax.block_until_ready(rewards))
         res = SimResult(
             name=name,

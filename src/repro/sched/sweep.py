@@ -1,0 +1,187 @@
+"""Batched scenario-sweep engine (paper §4 evaluation grids).
+
+The trace-driven evaluation sweeps many configurations — learning rate eta0,
+decay lambda, utility mix, trace seed, arrival rate rho, contention — and the
+old path ran them one at a time through Python (``simulator.run_all`` in a
+loop). Here a whole grid becomes ONE jitted/vmapped computation: specs and
+arrival tensors are stacked on a leading grid axis on the host, then every
+algorithm's scan runs for all configurations simultaneously.
+
+Layers:
+  * ``make_grid``      — cartesian product of sweep axes -> list[SweepPoint].
+  * ``build_batch``    — host-side trace generation + leaf stacking.
+  * ``run_algorithm``  — single-config rewards; the one code path shared by
+                         ``simulator.run_all`` and the vectorised grid.
+  * ``run_grid``       — jit(vmap(run_algorithm)) over the stacked batch.
+  * ``summarize``      — per-config averages + improvement-over-baselines.
+
+All sweep points must share (L, R, K, T) so stacked leaves are rectangular;
+everything else (adjacency, capacities, utility kinds, arrivals, eta0, decay)
+may vary per point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, ogasched
+from repro.core.graph import ClusterSpec
+from repro.sched import trace
+
+ALGORITHMS = ("ogasched",) + baselines.BASELINES
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One grid configuration: a trace plus OGA hyperparameters."""
+
+    cfg: trace.TraceConfig
+    eta0: float = 25.0
+    decay: float = 0.9999
+
+
+@dataclasses.dataclass
+class SweepBatch:
+    """Stacked operands for a grid of G configurations.
+
+    spec leaves and arrivals carry a leading (G,) axis; ``points`` keeps the
+    host-side provenance of each row (same order).
+    """
+
+    spec: ClusterSpec          # every leaf (G, ...)
+    arrivals: jax.Array        # (G, T, L)
+    eta0: jax.Array            # (G,)
+    decay: jax.Array           # (G,)
+    points: tuple[SweepPoint, ...] = ()
+
+    @property
+    def size(self) -> int:
+        return self.arrivals.shape[0]
+
+
+def make_grid(
+    base: Optional[trace.TraceConfig] = None,
+    *,
+    eta0s: Sequence[float] = (25.0,),
+    decays: Sequence[float] = (0.9999,),
+    utilities: Sequence[str] = ("mixed",),
+    seeds: Optional[Sequence[int]] = None,
+    rhos: Optional[Sequence[float]] = None,
+    contentions: Optional[Sequence[float]] = None,
+) -> list[SweepPoint]:
+    """Cartesian product of sweep axes over a base TraceConfig.
+
+    Axis order (slowest to fastest): eta0, decay, utility, seed, rho,
+    contention — so neighbouring points share a trace where possible.
+    """
+    base = trace.TraceConfig() if base is None else base
+    seeds = (base.seed,) if seeds is None else seeds
+    rhos = (base.rho,) if rhos is None else rhos
+    contentions = (base.contention,) if contentions is None else contentions
+    points = []
+    for eta0, decay, util, seed, rho, cont in itertools.product(
+        eta0s, decays, utilities, seeds, rhos, contentions
+    ):
+        cfg = dataclasses.replace(
+            base, utility=util, seed=seed, rho=rho, contention=cont
+        )
+        points.append(SweepPoint(cfg=cfg, eta0=eta0, decay=decay))
+    return points
+
+
+def build_batch(points: Sequence[SweepPoint]) -> SweepBatch:
+    """Generate every point's (spec, arrivals) on the host and stack them."""
+    if not points:
+        raise ValueError("empty sweep grid")
+    shapes = {(p.cfg.L, p.cfg.R, p.cfg.K, p.cfg.T) for p in points}
+    if len(shapes) > 1:
+        raise ValueError(f"sweep points must share (L, R, K, T); got {shapes}")
+    specs, arrs = zip(*(trace.make(p.cfg) for p in points))
+    spec = jax.tree.map(lambda *ls: jnp.stack(ls), *specs)
+    return SweepBatch(
+        spec=spec,
+        arrivals=jnp.stack(arrs),
+        eta0=jnp.asarray([p.eta0 for p in points], jnp.float32),
+        decay=jnp.asarray([p.decay for p in points], jnp.float32),
+        points=tuple(points),
+    )
+
+
+def run_algorithm(
+    spec: ClusterSpec,
+    arrivals: jax.Array,
+    name: str,
+    *,
+    eta0: float | jax.Array = 25.0,
+    decay: float | jax.Array = 0.9999,
+    proj_iters: int = 64,
+    backend: str = "auto",
+) -> jax.Array:
+    """(T,) per-slot rewards of one algorithm on one configuration.
+
+    This is the single comparison path: ``simulator.run_all`` calls it per
+    algorithm, and ``run_grid`` vmaps it over a SweepBatch.
+    """
+    if name == "ogasched":
+        rewards, _ = ogasched.run(
+            spec, arrivals, eta0=eta0, decay=decay,
+            proj_iters=proj_iters, backend=backend,
+        )
+        return rewards
+    return baselines.run(spec, arrivals, name)
+
+
+@partial(jax.jit, static_argnames=("proj_iters", "backend"))
+def _run_grid_ogasched(spec, arrivals, eta0, decay, proj_iters, backend):
+    return jax.vmap(
+        lambda s, a, e, d: run_algorithm(
+            s, a, "ogasched", eta0=e, decay=d,
+            proj_iters=proj_iters, backend=backend,
+        )
+    )(spec, arrivals, eta0, decay)
+
+
+def run_grid(
+    batch: SweepBatch,
+    algorithms: Sequence[str] = ALGORITHMS,
+    *,
+    backend: str = "reference",
+    proj_iters: int = 64,
+) -> dict[str, jax.Array]:
+    """Run every algorithm over every configuration: {name: (G, T) rewards}.
+
+    ``backend`` applies to OGASCHED only; the default stays on the reference
+    update because the grid vmaps whole scans and interpret-mode Pallas under
+    vmap is needlessly slow off-TPU ("fused" composes on TPU).
+    """
+    out: dict[str, jax.Array] = {}
+    for name in algorithms:
+        if name == "ogasched":
+            out[name] = _run_grid_ogasched(
+                batch.spec, batch.arrivals, batch.eta0, batch.decay,
+                proj_iters, backend,
+            )
+        else:
+            out[name] = baselines.run_batch(batch.spec, batch.arrivals, name)
+    return out
+
+
+def summarize(rewards: dict[str, jax.Array]) -> dict[str, np.ndarray]:
+    """Per-config average rewards + OGASCHED improvement percentages.
+
+    Returns {"avg/<name>": (G,), "improvement_pct/<name>": (G,)} mirroring
+    ``simulator.improvement_over_baselines`` per grid row.
+    """
+    out = {f"avg/{n}": np.asarray(r).mean(axis=1) for n, r in rewards.items()}
+    if "ogasched" in rewards:
+        oga = out["avg/ogasched"]
+        for n in rewards:
+            if n != "ogasched":
+                out[f"improvement_pct/{n}"] = 100.0 * (oga / out[f"avg/{n}"] - 1.0)
+    return out

@@ -1,0 +1,143 @@
+"""Dependency-free stand-in for the ``hypothesis`` API the suite uses.
+
+Test modules import it as::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+Real hypothesis does randomized search with shrinking; this shim replays a
+fixed, seeded grid of examples per strategy so the suite still exercises many
+inputs deterministically on machines without hypothesis installed. Supported
+surface: ``strategies.integers/floats/sampled_from``, ``@given`` (positional
+or keyword strategies), and ``@settings(max_examples=..., deadline=...)`` in
+either decorator order.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 20
+# Replaying hypothesis-sized example counts (60-80) is wasted time for a
+# deterministic grid; cap per-test examples while keeping coverage.
+_EXAMPLE_CAP = 25
+
+
+class _Strategy:
+    """A deterministic example generator. ``examples(n, seed)`` yields n
+    values spread over the strategy's domain, seeded so distinct tests see
+    distinct (but reproducible) points."""
+
+    def examples(self, n: int, seed: int):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def examples(self, n: int, seed: int):
+        span = self.hi - self.lo
+        out = [self.lo, self.hi] if span > 0 else [self.lo]
+        i = 0
+        while len(out) < n:
+            # LCG walk over the inclusive range — cheap, seeded, no numpy.
+            seed = (seed * 6364136223846793005 + 1442695040888963407) % 2**63
+            out.append(self.lo + seed % (span + 1))
+            i += 1
+        return out[:n]
+
+
+class _Floats(_Strategy):
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def examples(self, n: int, seed: int):
+        out = [self.lo, self.hi]
+        while len(out) < n:
+            seed = (seed * 6364136223846793005 + 1442695040888963407) % 2**63
+            frac = (seed % 10**9) / 10**9
+            out.append(self.lo + frac * (self.hi - self.lo))
+        return out[:n]
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elems):
+        self.elems = list(elems)
+
+    def examples(self, n: int, seed: int):
+        return list(itertools.islice(itertools.cycle(self.elems), n))
+
+
+class strategies:  # noqa: N801 - mirrors the hypothesis module name
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 2**31 - 1) -> _Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        return _SampledFrom(elements)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records example-count preferences on the test fn (order-independent
+    with @given: whichever decorator runs last finds the other's marker)."""
+
+    def deco(fn):
+        fn._hc_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies: _Strategy, **kw_strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*outer_args, **outer_kw):
+            max_ex = getattr(fn, "_hc_max_examples", None)
+            max_ex = getattr(wrapper, "_hc_max_examples", max_ex)
+            n = min(max_ex or _DEFAULT_MAX_EXAMPLES, _EXAMPLE_CAP)
+            seed = zlib.adler32(fn.__qualname__.encode())
+            pos_grid = [
+                s.examples(n, seed + 13 * i)
+                for i, s in enumerate(arg_strategies)
+            ]
+            kw_grid = {
+                k: s.examples(n, seed + zlib.adler32(k.encode()))
+                for k, s in kw_strategies.items()
+            }
+            for j in range(n):
+                args = tuple(col[j] for col in pos_grid)
+                kw = {k: col[j] for k, col in kw_grid.items()}
+                try:
+                    fn(*outer_args, *args, **outer_kw, **kw)
+                except Exception as e:  # mimic hypothesis' falsifying report
+                    raise AssertionError(
+                        f"falsifying example ({fn.__name__}): "
+                        f"args={args} kwargs={kw}"
+                    ) from e
+
+        # Hide strategy-bound params from pytest's fixture resolution (real
+        # hypothesis rewrites the signature the same way); params that remain
+        # (e.g. pytest fixtures) are still collected normally.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        bound = set(kw_strategies)
+        if arg_strategies:
+            free = [p for p in params if p.name not in bound]
+            bound.update(p.name for p in free[-len(arg_strategies):])
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for p in params if p.name not in bound]
+        )
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco

@@ -1,0 +1,94 @@
+"""Fused-kernel backend == reference backend, end to end.
+
+The fused Pallas kernel (kernels/oga_step) runs inside ``ogasched.run``'s
+scan via ``backend="fused"`` — real Pallas on TPU, interpret mode here on
+CPU. These tests certify trajectory-level parity with the three-pass
+reference update and the feasibility of every projected decision from both
+backends.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph, ogasched
+from repro.kernels import ops
+from repro.sched import trace
+
+SHAPES = [(4, 8, 3), (6, 12, 4), (8, 24, 6)]
+UTILITIES = ["linear", "log", "reciprocal", "poly"]
+
+
+def _setup(L, R, K, utility="mixed", seed=0, T=40):
+    cfg = trace.TraceConfig(T=T, L=L, R=R, K=K, utility=utility, seed=seed)
+    return trace.make(cfg)
+
+
+# --------------------------------------------------------------- e2e parity -
+@pytest.mark.parametrize("L,R,K", SHAPES)
+def test_fused_matches_reference_trajectory(L, R, K):
+    spec, arr = _setup(L, R, K)
+    r_ref, y_ref = ogasched.run(spec, arr, eta0=5.0, decay=0.999,
+                                backend="reference")
+    r_fus, y_fus = ogasched.run(spec, arr, eta0=5.0, decay=0.999,
+                                backend="fused")
+    scale = max(1.0, float(jnp.max(jnp.abs(r_ref))))
+    np.testing.assert_allclose(
+        np.asarray(r_fus), np.asarray(r_ref), atol=5e-5 * scale
+    )
+    np.testing.assert_allclose(np.asarray(y_fus), np.asarray(y_ref), atol=1e-4)
+
+
+@pytest.mark.parametrize("utility", UTILITIES)
+def test_fused_matches_reference_all_utility_kinds(utility):
+    spec, arr = _setup(6, 12, 4, utility=utility, seed=11)
+    r_ref, y_ref = ogasched.run(spec, arr, eta0=8.0, decay=0.9995,
+                                backend="reference")
+    r_fus, y_fus = ogasched.run(spec, arr, eta0=8.0, decay=0.9995,
+                                backend="fused")
+    scale = max(1.0, float(jnp.max(jnp.abs(r_ref))))
+    np.testing.assert_allclose(
+        np.asarray(r_fus), np.asarray(r_ref), atol=5e-5 * scale
+    )
+    np.testing.assert_allclose(np.asarray(y_fus), np.asarray(y_ref), atol=1e-4)
+
+
+def test_auto_backend_resolves_off_tpu():
+    # On the CPU test runner "auto" must pick the reference path.
+    assert ops.resolve_oga_backend("auto") in ("fused", "reference")
+    if jax.default_backend() != "tpu":
+        assert ops.resolve_oga_backend("auto") == "reference"
+    with pytest.raises(ValueError):
+        ops.resolve_oga_backend("nope")
+
+
+def test_pack_unpack_roundtrip():
+    spec, _ = _setup(5, 7, 3)
+    y = graph.random_feasible_decision(spec, jax.random.PRNGKey(2))
+    rows = ops.pack_rows(y)
+    assert rows.shape == (spec.R * spec.K, spec.L)
+    back = ops.unpack_rows(rows, spec.L, spec.R, spec.K)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(y))
+
+
+# ------------------------------------------------------ feasibility property -
+@pytest.mark.parametrize("backend", ["reference", "fused"])
+def test_every_projected_decision_feasible(backend):
+    """Box constraint 0 <= y <= a, channel mask respected, per-(r,k) capacity
+    sum_l y <= c — for every slot of the trajectory, both backends."""
+    spec, arr = _setup(6, 12, 4, seed=5, T=30)
+    # large eta0 so the ascent step regularly violates constraints pre-proj.
+    _, _, traj = ogasched.run(
+        spec, arr, eta0=50.0, decay=0.999, backend=backend, return_traj=True
+    )
+    traj = np.asarray(traj)  # (T, L, R, K)
+    a = np.asarray(spec.a)[:, None, :]
+    m = np.asarray(spec.mask)[:, :, None]
+    c = np.asarray(spec.c)
+    assert (traj >= -1e-5).all()
+    assert (traj <= a + 1e-4).all()
+    assert (np.abs(traj * (1.0 - m)) <= 1e-6).all()
+    used = (traj * m).sum(axis=1)  # (T, R, K)
+    assert (used <= c + 1e-3).all()
+    for t in range(0, traj.shape[0], 7):
+        assert bool(graph.feasible(spec, jnp.asarray(traj[t]))), t

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dependency-free fallback (see _hypothesis_compat)
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import projection as proj
 from repro.core import graph

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dependency-free fallback (see _hypothesis_compat)
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import reward, graph
 from repro.sched import trace

@@ -22,6 +22,7 @@ def main() -> None:
         bench_hparams,
         bench_kernels,
         bench_large_scale,
+        bench_lifecycle,
         bench_regret,
         bench_reward,
         bench_roofline,
@@ -40,6 +41,7 @@ def main() -> None:
         ("fig7_utilities", lambda: bench_utilities.run(quick)),
         ("thm1_regret", lambda: bench_regret.run(quick)),
         ("sweep_throughput", lambda: bench_sweep.run(quick)),
+        ("lifecycle_jct", lambda: bench_lifecycle.run(quick)),
         ("kernels", lambda: bench_kernels.run(quick)),
         ("roofline", bench_roofline.run),
     ]

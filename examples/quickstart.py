@@ -34,3 +34,16 @@ for p, avg, imp in zip(points, summary["avg/ogasched"],
                        summary["improvement_pct/fairness"]):
     print(f"  eta0={p.eta0:5.1f} decay={p.decay:6.4f}  "
           f"avg_reward={avg:8.2f}  vs fairness {imp:+.2f}%")
+
+# --- job lifecycle: jobs hold resources, depart, and report JCT -----------
+# (docs/lifecycle.md; mode="lifecycle" nets capacities by held allocations.)
+import dataclasses
+
+life_cfg = dataclasses.replace(cfg, work_mean=600.0)  # multi-slot jobs
+life = run_all(life_cfg, mode="lifecycle", algorithms=("ogasched", "fairness"))
+print("\nlifecycle mode (jobs hold resources until their work drains):")
+for name, r in life.items():
+    m = r.lifecycle
+    print(f"  {name:12s} jct={m['jct_mean']:.2f} (p99 {m['jct_p99']:.1f}) "
+          f"slowdown={m['slowdown_mean']:.2f} util={m['utilization']:.3f} "
+          f"completed={m['completed']:.0f}")

@@ -129,6 +129,20 @@ _STEP_FNS = {
 BASELINES = tuple(_STEP_FNS)
 
 
+def step_fn(name: str):
+    """Per-slot heuristic ``(spec, x, w) -> y`` by name. The lifecycle layer
+    (sched.lifecycle) calls these against a residual-capacity spec so held
+    resources are invisible to new placements."""
+    return _STEP_FNS[name]
+
+
+def default_parallelism(spec: ClusterSpec, name: str) -> Optional[jax.Array]:
+    """Calibrated requested-parallelism w_l for a budgeted heuristic (None
+    for FAIRNESS, which has no budget). Precompute once outside scan bodies —
+    it only depends on the static adjacency."""
+    return None if name == "fairness" else _default_w(spec, name)
+
+
 @partial(jax.jit, static_argnames=("name",))
 def run(
     spec: ClusterSpec,

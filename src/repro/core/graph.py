@@ -84,6 +84,26 @@ def zeros_like_decision(spec: ClusterSpec) -> jax.Array:
     return jnp.zeros((spec.L, spec.R, spec.K), dtype=spec.a.dtype)
 
 
+def residual_capacity(spec: ClusterSpec, held: jax.Array) -> jax.Array:
+    """c - sum_l held_l, floored at 0: capacity left for new admissions.
+
+    ``held`` is an (L, R, K) occupancy tensor (resources granted to jobs that
+    are still executing, sched.lifecycle). The floor guards against small
+    negative residuals from accumulated float error in long simulations.
+    """
+    used = jnp.sum(held * spec.mask[:, :, None], axis=0)  # (R, K)
+    return jnp.maximum(spec.c - used, 0.0)
+
+
+def residual_spec(spec: ClusterSpec, held: jax.Array) -> ClusterSpec:
+    """The same bipartite problem with capacities netted by ``held``.
+
+    Traced-safe (c is a pytree leaf), so per-slot residual specs can be built
+    inside lax.scan bodies and under vmap.
+    """
+    return dataclasses.replace(spec, c=residual_capacity(spec, held))
+
+
 def random_feasible_decision(spec: ClusterSpec, key: jax.Array) -> jax.Array:
     """A strictly feasible y(1) in Y for OGA initialisation."""
     u = jax.random.uniform(key, (spec.L, spec.R, spec.K), dtype=spec.a.dtype)

@@ -8,13 +8,13 @@ from repro.core import utilities
 from repro.core.graph import ClusterSpec
 
 
-def port_rewards(spec: ClusterSpec, x: jax.Array, y: jax.Array) -> jax.Array:
-    """q_l(x, y) for every port (eq. 7, nice-setup separable form).
+def service_rates(spec: ClusterSpec, y: jax.Array) -> jax.Array:
+    """Speedup utility minus communication penalty per port (eq. 7 without
+    the arrival multiplier): sum_{r,k} f_r^k(y) - max_k beta_k sum_r y^k.
 
-    Args:
-      x: (L,) arrival indicators (float/int; §3.4 allows counts).
-      y: (L, R, K) allocations.
-    Returns: (L,) rewards.
+    This is both the per-port reward factor and — for the job-lifecycle layer
+    (sched.lifecycle) — the work-units-per-slot service rate an executing job
+    extracts from its held allocation.
     """
     m = spec.mask[:, :, None]
     ym = y * m
@@ -24,7 +24,18 @@ def port_rewards(spec: ClusterSpec, x: jax.Array, y: jax.Array) -> jax.Array:
     )  # (L,)
     s = jnp.sum(ym, axis=1)  # (L, K) quota per (port, resource)
     penalty = jnp.max(spec.beta[None, :] * s, axis=1)  # (L,)
-    return x.astype(y.dtype) * (gain - penalty)
+    return gain - penalty
+
+
+def port_rewards(spec: ClusterSpec, x: jax.Array, y: jax.Array) -> jax.Array:
+    """q_l(x, y) for every port (eq. 7, nice-setup separable form).
+
+    Args:
+      x: (L,) arrival indicators (float/int; §3.4 allows counts).
+      y: (L, R, K) allocations.
+    Returns: (L,) rewards.
+    """
+    return x.astype(y.dtype) * service_rates(spec, y)
 
 
 def total_reward(spec: ClusterSpec, x: jax.Array, y: jax.Array) -> jax.Array:

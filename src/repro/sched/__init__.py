@@ -1,1 +1,2 @@
-"""Cluster-scheduling substrate: traces, simulator, mesh-slice job manager."""
+"""Cluster-scheduling substrate: traces, slot/lifecycle simulators, scenario
+sweeps, mesh-slice job manager."""

@@ -1,0 +1,326 @@
+"""Occupancy-aware job-lifecycle simulation layer.
+
+The paper's jobs "request multiple computing resources and hold onto them
+during their execution", but the slot-mode simulator (sched.simulator)
+recomputes allocations from full capacity every slot: nothing is ever
+occupied, completed, or released. This module adds the missing lifecycle —
+jobs that arrive with a sampled amount of work, receive an allocation,
+*hold* it while executing, and depart when their work drains — as one pure
+``lax.scan``, so it jit-compiles, vmaps over scenario grids (sched.sweep),
+and composes with both OGA backends (kernels.ops).
+
+State machine per port (one job in service per port, FIFO queue behind it):
+
+    arrival --push--> QUEUED --admit (port idle)--> RUNNING --drain--> DONE
+        +--queue full--> DROPPED
+
+Slot order (one ``_step``): enqueue arrivals -> admit queue heads on idle
+ports -> allocate against *residual* capacity (graph.residual_capacity) ->
+collect admission reward -> service all running jobs at their
+utility-derived rate (reward.service_rates on the held allocation) ->
+depart drained jobs, freeing capacity -> policy update (OGA ascent on the
+admitted indicator).
+
+The allocation a job receives is the policy's proposal projected onto the
+residual-capacity polytope, so ``held + newly-allocated <= c`` holds by
+construction at every slot. When every job's work is ~0 (duration = 1 slot)
+queues never form, the residual equals the full capacity, and the per-slot
+rewards reduce exactly to slot-mode ``ogasched.run`` / ``baselines.run``
+(tests/test_lifecycle.py pins this).
+
+Metrics: per-job JCT (slots from arrival to departure, queueing included)
+and slowdown (JCT / service slots) as compared in heSRPT (arXiv:1903.09346),
+plus per-resource utilization as in online ML-cluster scheduling
+(arXiv:1801.00936). ``summarize`` reduces a trace to scalars.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, graph, projection, reward
+from repro.core.graph import ClusterSpec
+from repro.kernels import ops
+
+ALGORITHMS = ("ogasched",) + baselines.BASELINES
+
+# Jobs with sampled work below this floor still occupy their port for one
+# slot (duration-1 jobs are the slot-mode reduction, not zero-duration).
+WORK_FLOOR = 1e-6
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LifecycleState:
+    """Pure scan carry — every leaf is a fixed-shape jnp array.
+
+    held:      (L, R, K) resources granted to in-service jobs.
+    remaining: (L,) work left for the in-service job; 0 <=> port idle.
+    svc_arr:   (L,) arrival slot of the in-service job (JCT anchor).
+    svc_start: (L,) admission slot of the in-service job (slowdown anchor).
+    q_work:    (L, Q) FIFO of queued job sizes (0-padded past q_len).
+    q_arr:     (L, Q) FIFO of queued arrival slots.
+    q_len:     (L,) queue occupancy.
+    dropped:   () cumulative arrivals rejected by a full queue.
+    y:         (L, R, K) OGA decision (unused zeros for heuristics).
+    eta:       () OGA learning rate (decayed per slot, as in slot mode).
+    t:         () slot counter.
+    """
+
+    held: jax.Array
+    remaining: jax.Array
+    svc_arr: jax.Array
+    svc_start: jax.Array
+    q_work: jax.Array
+    q_arr: jax.Array
+    q_len: jax.Array
+    dropped: jax.Array
+    y: jax.Array
+    eta: jax.Array
+    t: jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class LifecycleTrace:
+    """Per-slot event record (leaves (T, ...); (G, T, ...) from run_grid).
+
+    rewards:   (T,) admission reward q(admitted, alloc) per slot.
+    admitted:  (T, L) job entered service this slot.
+    departed:  (T, L) job drained and freed its resources this slot.
+    jct:       (T, L) completion time in slots (arrival -> departure,
+               queueing included); valid where ``departed``.
+    svc_slots: (T, L) service time in slots (admission -> departure);
+               valid where ``departed``. slowdown = jct / svc_slots.
+    used:      (T, R, K) peak occupancy of the slot: held + newly allocated,
+               before departures free anything.
+    running:   (T, L) port busy at the end of the slot.
+    q_depth:   (T, L) queue occupancy at the end of the slot.
+    dropped:   (T,) cumulative queue-full rejections.
+    """
+
+    rewards: jax.Array
+    admitted: jax.Array
+    departed: jax.Array
+    jct: jax.Array
+    svc_slots: jax.Array
+    used: jax.Array
+    running: jax.Array
+    q_depth: jax.Array
+    dropped: jax.Array
+
+
+def init_state(
+    spec: ClusterSpec,
+    eta0: float | jax.Array,
+    queue_depth: int,
+    y0: Optional[jax.Array] = None,
+) -> LifecycleState:
+    L, R, K = spec.L, spec.R, spec.K
+    dtype = spec.a.dtype
+    return LifecycleState(
+        held=jnp.zeros((L, R, K), dtype),
+        remaining=jnp.zeros((L,), dtype),
+        svc_arr=jnp.zeros((L,), jnp.int32),
+        svc_start=jnp.zeros((L,), jnp.int32),
+        q_work=jnp.zeros((L, queue_depth), dtype),
+        q_arr=jnp.zeros((L, queue_depth), jnp.int32),
+        q_len=jnp.zeros((L,), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
+        y=graph.zeros_like_decision(spec) if y0 is None else y0,
+        eta=jnp.asarray(eta0, dtype),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def _step(
+    spec: ClusterSpec,
+    state: LifecycleState,
+    x_t: jax.Array,
+    w_t: jax.Array,
+    *,
+    algorithm: str,
+    decay,
+    rate_floor,
+    proj_iters: int,
+    backend: str,
+    step_w,
+    operands,
+):
+    """One slot of the lifecycle state machine; returns (state', events)."""
+    L = spec.L
+    dtype = spec.a.dtype
+    queue_depth = state.q_work.shape[1]
+    t = state.t
+
+    # -- enqueue arrivals (x is treated as an indicator: <=1 job/port/slot) --
+    arrive = x_t > 0
+    can_q = state.q_len < queue_depth
+    push = arrive & can_q
+    pushf = push.astype(dtype)
+    tail = jax.nn.one_hot(state.q_len, queue_depth, dtype=dtype)  # (L, Q)
+    q_work = state.q_work + tail * (w_t * pushf)[:, None]
+    q_arr = state.q_arr + (tail * pushf[:, None]).astype(jnp.int32) * t
+    q_len = state.q_len + push.astype(jnp.int32)
+    dropped = state.dropped + jnp.sum(arrive & ~can_q).astype(jnp.int32)
+
+    # -- admit the queue head wherever the port is idle --
+    idle = state.remaining <= 0
+    admit = idle & (q_len > 0)
+    new_work = jnp.maximum(q_work[:, 0], WORK_FLOOR)
+    new_arr = q_arr[:, 0]
+    shift_w = jnp.concatenate([q_work[:, 1:], jnp.zeros((L, 1), dtype)], 1)
+    shift_a = jnp.concatenate([q_arr[:, 1:], jnp.zeros((L, 1), jnp.int32)], 1)
+    q_work = jnp.where(admit[:, None], shift_w, q_work)
+    q_arr = jnp.where(admit[:, None], shift_a, q_arr)
+    q_len = q_len - admit.astype(jnp.int32)
+    admit_f = admit.astype(dtype)
+
+    # -- allocate against residual capacity --
+    c_res = graph.residual_capacity(spec, state.held)
+    if algorithm == "ogasched":
+        y_prop = state.y
+    else:
+        y_prop = baselines.step_fn(algorithm)(
+            graph.residual_spec(spec, state.held), admit_f, step_w
+        )
+    alloc = projection.project_bisection(
+        y_prop * admit_f[:, None, None], spec.a, c_res, spec.mask,
+        iters=proj_iters,
+    )
+    reward_t = reward.total_reward(spec, admit_f, alloc)
+
+    held = jnp.where(admit[:, None, None], alloc, state.held)
+    remaining = jnp.where(admit, new_work, state.remaining)
+    svc_arr = jnp.where(admit, new_arr, state.svc_arr)
+    svc_start = jnp.where(admit, t, state.svc_start)
+    used = jnp.sum(held * spec.mask[:, :, None], axis=0)  # (R, K) slot peak
+
+    # -- service: drain work at the utility-derived rate of the held alloc --
+    in_svc = remaining > 0
+    rates = jnp.maximum(reward.service_rates(spec, held), rate_floor)
+    rem2 = remaining - rates * in_svc.astype(dtype)
+    depart = in_svc & (rem2 <= 0)
+    departf = depart.astype(dtype)
+    jct = (t - svc_arr + 1).astype(dtype) * departf
+    svc_slots = (t - svc_start + 1).astype(dtype) * departf
+    held = jnp.where(depart[:, None, None], 0.0, held)
+    remaining = jnp.where(depart, 0.0, jnp.maximum(rem2, 0.0))
+
+    # -- policy update: OGA ascends on the raw arrival indicator, exactly as
+    # in slot mode — the learner sees the same stream either way; lifecycle
+    # only changes which decisions get *executed* (admissions, netted by
+    # residual capacity). Queue/occupancy state never leaks into learning.
+    if algorithm == "ogasched":
+        y_next = ops.oga_update_spec(
+            spec, state.y, x_t, state.eta,
+            backend=backend, proj_iters=proj_iters, operands=operands,
+        )
+    else:
+        y_next = state.y
+
+    new_state = LifecycleState(
+        held=held, remaining=remaining, svc_arr=svc_arr, svc_start=svc_start,
+        q_work=q_work, q_arr=q_arr, q_len=q_len, dropped=dropped,
+        y=y_next, eta=state.eta * decay, t=t + 1,
+    )
+    events = (
+        reward_t, admit, depart, jct, svc_slots, used,
+        remaining > 0, q_len, dropped,
+    )
+    return new_state, events
+
+
+@partial(
+    jax.jit,
+    static_argnames=("algorithm", "queue_depth", "proj_iters", "backend"),
+)
+def run(
+    spec: ClusterSpec,
+    arrivals: jax.Array,
+    works: jax.Array,
+    algorithm: str = "ogasched",
+    *,
+    eta0: float | jax.Array = 25.0,
+    decay: float | jax.Array = 0.9999,
+    queue_depth: int = 8,
+    rate_floor: float | jax.Array = 1e-3,
+    proj_iters: int = 64,
+    backend: str = "auto",
+    y0: Optional[jax.Array] = None,
+) -> LifecycleTrace:
+    """Run one algorithm through the job lifecycle over a trace.
+
+    Args:
+      arrivals: (T, L) arrival indicators (trace.build_arrivals).
+      works:    (T, L) sampled job sizes in work units (trace.build_works);
+                works[t, l] is consumed iff a job arrives at (t, l).
+      algorithm: "ogasched" or a baseline name (baselines.BASELINES).
+      eta0, decay: OGA hyperparameters; traced arrays vmap (sched.sweep).
+      queue_depth: per-port FIFO bound; overflowing arrivals are dropped.
+      rate_floor: minimum service rate, so zero-allocation admissions still
+        drain (no deadlock) — work units per slot.
+      backend: OGA update backend, "auto" | "fused" | "reference".
+      y0: initial OGA decision. Defaults to a seeded random feasible point
+        rather than slot-mode's zeros: an allocation is *held* for the job's
+        whole tenure here, and a zero allocation would pin the first job per
+        port to the rate floor, blocking the port for the entire trace.
+    Returns: LifecycleTrace of per-slot events (leaves lead with T).
+    """
+    backend = ops.resolve_oga_backend(backend)
+    use_oga = algorithm == "ogasched"
+    operands = ops.pack_spec_operands(spec) if use_oga and backend == "fused" else None
+    step_w = None if use_oga else baselines.default_parallelism(spec, algorithm)
+    if y0 is None and use_oga:
+        y0 = graph.random_feasible_decision(spec, jax.random.PRNGKey(0))
+    state = init_state(spec, eta0, queue_depth, y0)
+
+    def body(s, xw):
+        x_t, w_t = xw
+        return _step(
+            spec, s, x_t, w_t, algorithm=algorithm, decay=decay,
+            rate_floor=rate_floor, proj_iters=proj_iters, backend=backend,
+            step_w=step_w, operands=operands,
+        )
+
+    _, events = jax.lax.scan(body, state, (arrivals, works))
+    return LifecycleTrace(*events)
+
+
+def summarize(tr: LifecycleTrace, spec: ClusterSpec) -> dict[str, float]:
+    """Host-side scalar metrics for one lifecycle trace.
+
+    jct_mean / jct_p99: completion time in slots over finished jobs.
+    slowdown_mean: mean JCT / service-time ratio (1.0 = never queued).
+    utilization: mean_t mean_{r,k} used / c; utilization/<k>: per resource.
+    completed / arrived / dropped: job counts (arrived = admitted+queued,
+    i.e. drops excluded); throughput: completed per slot.
+    """
+    departed = np.asarray(tr.departed, bool)
+    jct = np.asarray(tr.jct)[departed]
+    svc = np.asarray(tr.svc_slots)[departed]
+    used = np.asarray(tr.used)  # (T, R, K)
+    c = np.maximum(np.asarray(spec.c), 1e-9)
+    util_k = (used / c[None]).mean(axis=(0, 1))  # (K,)
+    out = {
+        "completed": float(departed.sum()),
+        "arrived": float(np.asarray(tr.admitted).sum()
+                         + np.asarray(tr.q_depth)[-1].sum()),
+        "dropped": float(np.asarray(tr.dropped)[-1]),
+        "throughput": float(departed.sum()) / departed.shape[0],
+        "jct_mean": float(jct.mean()) if jct.size else float("nan"),
+        "jct_p99": float(np.percentile(jct, 99)) if jct.size else float("nan"),
+        "slowdown_mean": (
+            float((jct / np.maximum(svc, 1.0)).mean()) if jct.size
+            else float("nan")
+        ),
+        "utilization": float(util_k.mean()),
+    }
+    for k, u in enumerate(util_k):
+        out[f"utilization/{k}"] = float(u)
+    return out

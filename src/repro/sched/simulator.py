@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines, graph, ogasched, regret
-from repro.sched import sweep, trace
+from repro.sched import lifecycle, sweep, trace
 
 
 @dataclasses.dataclass
@@ -22,6 +22,9 @@ class SimResult:
     wall_s: float
     regret: Optional[float] = None
     regret_bound: Optional[float] = None
+    # lifecycle-mode metrics (lifecycle.summarize): jct_mean, jct_p99,
+    # slowdown_mean, utilization[/k], completed, dropped, throughput.
+    lifecycle: Optional[dict] = None
 
 
 def run_all(
@@ -33,30 +36,59 @@ def run_all(
     oracle_iters: int = 2000,
     backend: str = "auto",
     proj_iters: int = 64,
+    mode: str = "slot",
+    queue_depth: int = 8,
+    rate_floor: float = 1e-3,
 ) -> dict[str, SimResult]:
     """Single-configuration comparison; each algorithm goes through the same
-    ``sweep.run_algorithm`` path the vectorised grid uses (sched.sweep), so
-    run_all on one config and run_grid on G configs agree by construction."""
+    paths the vectorised grid uses (``sweep.run_algorithm`` /
+    ``lifecycle.run``), so run_all on one config and run_grid on G configs
+    agree by construction.
+
+    mode="lifecycle" runs the occupancy-aware job lifecycle (jobs hold
+    their allocation until their work drains; sched.lifecycle) and fills
+    ``SimResult.lifecycle`` with JCT/slowdown/utilization metrics. Regret
+    is a slot-mode notion (the comparator plays every slot from full
+    capacity), so ``with_regret`` only applies in slot mode.
+    """
+    if mode not in ("slot", "lifecycle"):
+        raise ValueError(f"mode must be 'slot' or 'lifecycle', got {mode!r}")
     spec, arrivals = trace.make(cfg)
+    works = trace.build_works(cfg) if mode == "lifecycle" else None
     out: dict[str, SimResult] = {}
     y_star = None
-    if with_regret:
+    # The oracle only feeds OGASCHED's regret certificate — skip the
+    # oracle_iters-step offline solve when nothing will consume it.
+    if with_regret and mode == "slot" and "ogasched" in algorithms:
         y_star = regret.offline_optimum(spec, arrivals, iters=oracle_iters)
     for name in algorithms:
         t0 = time.time()
-        rewards = sweep.run_algorithm(
-            spec, arrivals, name,
-            eta0=eta0, decay=decay, proj_iters=proj_iters, backend=backend,
-        )
-        rewards = np.asarray(jax.block_until_ready(rewards))
+        metrics = None
+        if mode == "lifecycle":
+            tr = lifecycle.run(
+                spec, arrivals, works, name,
+                eta0=eta0, decay=decay, proj_iters=proj_iters,
+                backend=backend, queue_depth=queue_depth,
+                rate_floor=rate_floor,
+            )
+            tr = jax.block_until_ready(tr)
+            rewards = np.asarray(tr.rewards)
+            metrics = lifecycle.summarize(tr, spec)
+        else:
+            rewards = sweep.run_algorithm(
+                spec, arrivals, name,
+                eta0=eta0, decay=decay, proj_iters=proj_iters, backend=backend,
+            )
+            rewards = np.asarray(jax.block_until_ready(rewards))
         res = SimResult(
             name=name,
             rewards=rewards,
             avg_reward=float(rewards.mean()),
             cumulative=float(rewards.sum()),
             wall_s=time.time() - t0,
+            lifecycle=metrics,
         )
-        if with_regret and name == "ogasched":
+        if y_star is not None and name == "ogasched":
             res.regret = float(
                 regret.regret(spec, arrivals, jnp.asarray(rewards), y_star)
             )

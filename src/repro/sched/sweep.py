@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core import baselines, ogasched
 from repro.core.graph import ClusterSpec
-from repro.sched import trace
+from repro.sched import lifecycle, trace
 
 ALGORITHMS = ("ogasched",) + baselines.BASELINES
 
@@ -50,14 +50,15 @@ class SweepPoint:
 class SweepBatch:
     """Stacked operands for a grid of G configurations.
 
-    spec leaves and arrivals carry a leading (G,) axis; ``points`` keeps the
-    host-side provenance of each row (same order).
+    spec leaves, arrivals, and works carry a leading (G,) axis; ``points``
+    keeps the host-side provenance of each row (same order).
     """
 
     spec: ClusterSpec          # every leaf (G, ...)
     arrivals: jax.Array        # (G, T, L)
     eta0: jax.Array            # (G,)
     decay: jax.Array           # (G,)
+    works: jax.Array = None    # (G, T, L) job sizes (lifecycle mode)
     points: tuple[SweepPoint, ...] = ()
 
     @property
@@ -102,13 +103,14 @@ def build_batch(points: Sequence[SweepPoint]) -> SweepBatch:
     shapes = {(p.cfg.L, p.cfg.R, p.cfg.K, p.cfg.T) for p in points}
     if len(shapes) > 1:
         raise ValueError(f"sweep points must share (L, R, K, T); got {shapes}")
-    specs, arrs = zip(*(trace.make(p.cfg) for p in points))
+    specs, arrs, works = zip(*(trace.make_lifecycle(p.cfg) for p in points))
     spec = jax.tree.map(lambda *ls: jnp.stack(ls), *specs)
     return SweepBatch(
         spec=spec,
         arrivals=jnp.stack(arrs),
         eta0=jnp.asarray([p.eta0 for p in points], jnp.float32),
         decay=jnp.asarray([p.decay for p in points], jnp.float32),
+        works=jnp.stack(works),
         points=tuple(points),
     )
 
@@ -147,22 +149,56 @@ def _run_grid_ogasched(spec, arrivals, eta0, decay, proj_iters, backend):
     )(spec, arrivals, eta0, decay)
 
 
+@partial(
+    jax.jit,
+    static_argnames=("name", "proj_iters", "backend", "queue_depth"),
+)
+def _run_grid_lifecycle(
+    spec, arrivals, works, eta0, decay, rate_floor,
+    name, proj_iters, backend, queue_depth,
+):
+    return jax.vmap(
+        lambda s, a, w, e, d: lifecycle.run(
+            s, a, w, name, eta0=e, decay=d, proj_iters=proj_iters,
+            backend=backend, queue_depth=queue_depth, rate_floor=rate_floor,
+        )
+    )(spec, arrivals, works, eta0, decay)
+
+
 def run_grid(
     batch: SweepBatch,
     algorithms: Sequence[str] = ALGORITHMS,
     *,
     backend: str = "reference",
     proj_iters: int = 64,
-) -> dict[str, jax.Array]:
-    """Run every algorithm over every configuration: {name: (G, T) rewards}.
+    mode: str = "slot",
+    queue_depth: int = 8,
+    rate_floor: float = 1e-3,
+) -> dict[str, jax.Array] | dict[str, lifecycle.LifecycleTrace]:
+    """Run every algorithm over every configuration.
+
+    mode="slot" (default): {name: (G, T) rewards}, allocations recomputed
+    from full capacity each slot. mode="lifecycle": jobs hold resources
+    until their work drains (sched.lifecycle); returns {name:
+    LifecycleTrace} with every leaf leading (G, T, ...) — reduce with
+    ``summarize_lifecycle``.
 
     ``backend`` applies to OGASCHED only; the default stays on the reference
     update because the grid vmaps whole scans and interpret-mode Pallas under
     vmap is needlessly slow off-TPU ("fused" composes on TPU).
     """
-    out: dict[str, jax.Array] = {}
+    if mode not in ("slot", "lifecycle"):
+        raise ValueError(f"mode must be 'slot' or 'lifecycle', got {mode!r}")
+    out: dict = {}
     for name in algorithms:
-        if name == "ogasched":
+        if mode == "lifecycle":
+            out[name] = _run_grid_lifecycle(
+                batch.spec, batch.arrivals, batch.works, batch.eta0,
+                batch.decay, jnp.asarray(rate_floor, jnp.float32),
+                name, proj_iters,
+                backend if name == "ogasched" else "reference", queue_depth,
+            )
+        elif name == "ogasched":
             out[name] = _run_grid_ogasched(
                 batch.spec, batch.arrivals, batch.eta0, batch.decay,
                 proj_iters, backend,
@@ -185,3 +221,22 @@ def summarize(rewards: dict[str, jax.Array]) -> dict[str, np.ndarray]:
             if n != "ogasched":
                 out[f"improvement_pct/{n}"] = 100.0 * (oga / out[f"avg/{n}"] - 1.0)
     return out
+
+
+def summarize_lifecycle(
+    traces: dict[str, lifecycle.LifecycleTrace], batch: SweepBatch
+) -> dict[str, np.ndarray]:
+    """Per-config lifecycle metrics: {"<metric>/<name>": (G,)} for every
+    scalar ``lifecycle.summarize`` reports (jct_mean, jct_p99,
+    slowdown_mean, utilization, ...)."""
+    out: dict[str, list] = {}
+    # one device->host transfer per leaf, then slice rows on the host
+    spec_np = jax.tree.map(np.asarray, batch.spec)
+    for name, tr in traces.items():
+        tr_np = jax.tree.map(np.asarray, tr)
+        for g in range(batch.size):
+            row_tr = jax.tree.map(lambda leaf: leaf[g], tr_np)
+            row_spec = jax.tree.map(lambda leaf: leaf[g], spec_np)
+            for metric, v in lifecycle.summarize(row_tr, row_spec).items():
+                out.setdefault(f"{metric}/{name}", []).append(v)
+    return {k: np.asarray(v) for k, v in out.items()}

@@ -64,6 +64,13 @@ class TraceConfig:
     seed: int = 0
     diurnal: bool = True        # non-stationary arrival modulation
     burst_prob: float = 0.02    # prob. a slot starts a 20-slot burst
+    # job sizes for lifecycle mode (sched.lifecycle), in work units drained
+    # at the utility-derived service rate (reward.service_rates):
+    work_mean: float = 60.0     # mean sampled job size
+    work_tail: float = 2.1      # Pareto tail index (heavy-tailed sizes)
+
+
+BURST_LEN = 20  # slots a burst keeps a port firing
 
 
 def build_spec(cfg: TraceConfig) -> ClusterSpec:
@@ -113,12 +120,13 @@ def build_arrivals(cfg: TraceConfig, multi: bool = False) -> jax.Array:
         t = np.arange(cfg.T)[:, None]
         phase = rng.uniform(0, 2 * np.pi, (1, cfg.L))
         base = base * (0.75 + 0.25 * np.sin(2 * np.pi * t / 288.0 + phase))
-    # bursts: short windows where a port fires every slot
-    burst = np.zeros_like(base, dtype=bool)
+    # bursts: short windows where a port fires every slot. burst[t] is true
+    # iff any start fell in (t - BURST_LEN, t]; the windowed any() is a
+    # cumulative-sum difference, replacing the old O(T*L) Python loop
+    # (pinned equal in tests/test_trace.py).
     starts = rng.uniform(size=(cfg.T, cfg.L)) < cfg.burst_prob
-    for l in range(cfg.L):
-        for t0 in np.nonzero(starts[:, l])[0]:
-            burst[t0 : t0 + 20, l] = True
+    cum = np.cumsum(starts, axis=0)
+    burst = (cum - np.pad(cum, ((BURST_LEN, 0), (0, 0)))[: cfg.T]) > 0
     p = np.clip(np.where(burst, 0.95, base), 0.0, 1.0)
     if multi:
         x = rng.poisson(p * 2.0)
@@ -127,6 +135,26 @@ def build_arrivals(cfg: TraceConfig, multi: bool = False) -> jax.Array:
     return jnp.asarray(x, jnp.float32)
 
 
+def build_works(cfg: TraceConfig) -> jax.Array:
+    """(T, L) heavy-tailed job sizes for lifecycle mode (sched.lifecycle).
+
+    Sizes are Lomax/Pareto-II distributed — work_mean * (tail-1)/tail *
+    (1 + Pareto(tail)) — so the mean is ``cfg.work_mean`` while the tail
+    produces the elephant jobs that make JCT/slowdown interesting (cluster
+    traces are heavy-tailed; cf. heSRPT, arXiv:1903.09346). Seeded apart
+    from the arrival stream so the two resample independently.
+    """
+    rng = np.random.default_rng(cfg.seed + 2)
+    scale = cfg.work_mean * (cfg.work_tail - 1.0) / cfg.work_tail
+    w = scale * (1.0 + rng.pareto(cfg.work_tail, size=(cfg.T, cfg.L)))
+    return jnp.asarray(w, jnp.float32)
+
+
 def make(cfg: TraceConfig):
     """Convenience: (spec, arrivals)."""
     return build_spec(cfg), build_arrivals(cfg)
+
+
+def make_lifecycle(cfg: TraceConfig):
+    """Convenience: (spec, arrivals, works) for lifecycle-mode runs."""
+    return build_spec(cfg), build_arrivals(cfg), build_works(cfg)

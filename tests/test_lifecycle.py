@@ -1,0 +1,177 @@
+"""Property tests for the job-lifecycle layer (sched.lifecycle).
+
+Invariants, over random traces and both OGA backends:
+  * capacity: held + newly-allocated never exceeds c at any slot;
+  * job conservation: accepted arrivals == running + queued + completed,
+    and total arrivals additionally account for queue-overflow drops;
+  * departures monotonically free capacity (a slot with no admissions can
+    only shrink per-(r,k) usage), and a drained system returns to empty;
+  * duration-1 reduction: when every job's work is ~0 the per-slot rewards
+    equal slot-mode ``ogasched.run`` / ``baselines.run`` exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # dependency-free fallback (see _hypothesis_compat)
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import baselines, graph, ogasched
+from repro.sched import lifecycle, trace
+
+# One shape for the property runs so lifecycle.run compiles once per
+# (algorithm, backend) and hypothesis examples replay from the jit cache.
+T, L, R, K = 60, 6, 16, 4
+
+
+def _cfg(seed=0, rho=0.7, contention=10.0, utility="mixed", **kw):
+    return trace.TraceConfig(
+        T=T, L=L, R=R, K=K, seed=seed, rho=rho, contention=contention,
+        utility=utility, **kw,
+    )
+
+
+def _run(cfg, algorithm="ogasched", backend="reference", **kw):
+    spec, arr, works = trace.make_lifecycle(cfg)
+    tr = lifecycle.run(spec, arr, works, algorithm, backend=backend, **kw)
+    return spec, arr, jax.block_until_ready(tr)
+
+
+# ------------------------------------------------------- capacity invariant -
+@pytest.mark.parametrize("backend", ["reference", "fused"])
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(0, 100),
+    rho=st.floats(0.2, 0.95),
+    contention=st.floats(5.0, 40.0),
+)
+def test_capacity_never_exceeded(backend, seed, rho, contention):
+    cfg = _cfg(seed=seed, rho=rho, contention=contention)
+    spec, _, tr = _run(cfg, backend=backend)
+    used = np.asarray(tr.used)  # (T, R, K) held + newly allocated, slot peak
+    c = np.asarray(spec.c)
+    assert (used <= c[None] + 1e-3).all(), float((used - c[None]).max())
+    assert (used >= -1e-5).all()
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 100), name=st.sampled_from(baselines.BASELINES))
+def test_capacity_never_exceeded_baselines(seed, name):
+    spec, _, tr = _run(_cfg(seed=seed), algorithm=name)
+    used = np.asarray(tr.used)
+    assert (used <= np.asarray(spec.c)[None] + 1e-3).all()
+
+
+# --------------------------------------------------------- job conservation -
+@settings(max_examples=6, deadline=None)
+@given(
+    seed=st.integers(0, 100),
+    rho=st.floats(0.2, 0.95),
+    name=st.sampled_from(("ogasched",) + baselines.BASELINES),
+)
+def test_job_conservation_every_slot(seed, rho, name):
+    cfg = _cfg(seed=seed, rho=rho)
+    _, arr, tr = _run(cfg, algorithm=name)
+    arrived = (np.asarray(arr) > 0).sum(axis=1)            # (T,)
+    dropped = np.asarray(tr.dropped)                       # (T,) cumulative
+    accepted = np.cumsum(arrived) - dropped
+    completed = np.cumsum(np.asarray(tr.departed).sum(axis=1))
+    running = np.asarray(tr.running).sum(axis=1)
+    queued = np.asarray(tr.q_depth).sum(axis=1)
+    np.testing.assert_array_equal(accepted, completed + running + queued)
+    # admissions are accepted arrivals leaving the queue
+    admitted = np.cumsum(np.asarray(tr.admitted).sum(axis=1))
+    np.testing.assert_array_equal(admitted, completed + running)
+    assert (np.diff(dropped) >= 0).all()
+
+
+# ------------------------------------------- departures monotonically free --
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 100),
+       name=st.sampled_from(("ogasched", "fairness", "drf")))
+def test_departures_monotonically_free_capacity(seed, name):
+    """In any slot with no admissions, per-(r,k) usage can only shrink —
+    departures free exactly what the departing jobs held."""
+    _, _, tr = _run(_cfg(seed=seed), algorithm=name)
+    used = np.asarray(tr.used)
+    admitted = np.asarray(tr.admitted).any(axis=1)
+    for t in range(1, used.shape[0]):
+        if not admitted[t]:
+            assert (used[t] <= used[t - 1] + 1e-5).all(), t
+
+
+def test_system_drains_to_empty_when_arrivals_stop():
+    cfg = _cfg(seed=5, rho=0.8)
+    spec, arr, works = trace.make_lifecycle(cfg)
+    arr = jnp.asarray(np.asarray(arr) * (np.arange(T)[:, None] < T // 3))
+    works = jnp.minimum(works, 30.0)  # bound the tail so the run drains
+    tr = jax.block_until_ready(lifecycle.run(spec, arr, works, "ogasched"))
+    assert not np.asarray(tr.running)[-1].any()
+    assert not np.asarray(tr.q_depth)[-1].any()
+    np.testing.assert_allclose(np.asarray(tr.used)[-1], 0.0, atol=1e-5)
+
+
+# ------------------------------------------------------ duration-1 reduction -
+@pytest.mark.parametrize("backend", ["reference", "fused"])
+def test_duration1_reduces_to_slot_mode_ogasched(backend):
+    cfg = _cfg(seed=3)
+    spec, arr = trace.make(cfg)
+    works = jnp.zeros_like(arr)  # every job drains within its arrival slot
+    y0 = graph.random_feasible_decision(spec, jax.random.PRNGKey(0))
+    r_slot, _ = ogasched.run(
+        spec, arr, eta0=10.0, decay=0.999, backend=backend, y0=y0
+    )
+    tr = lifecycle.run(
+        spec, arr, works, "ogasched",
+        eta0=10.0, decay=0.999, backend=backend, y0=y0,
+    )
+    scale = max(1.0, float(jnp.max(jnp.abs(r_slot))))
+    np.testing.assert_allclose(
+        np.asarray(tr.rewards), np.asarray(r_slot), atol=1e-4 * scale
+    )
+    # with unit durations nothing ever queues, blocks, or overlaps
+    assert float(np.asarray(tr.dropped)[-1]) == 0
+    assert not np.asarray(tr.running)[-1].any()
+    jct = np.asarray(tr.jct)[np.asarray(tr.departed, bool)]
+    np.testing.assert_array_equal(jct, 1.0)
+
+
+@pytest.mark.parametrize("name", baselines.BASELINES)
+def test_duration1_reduces_to_slot_mode_baselines(name):
+    cfg = _cfg(seed=3)
+    spec, arr = trace.make(cfg)
+    works = jnp.zeros_like(arr)
+    r_slot = baselines.run(spec, arr, name)
+    tr = lifecycle.run(spec, arr, works, name)
+    scale = max(1.0, float(jnp.max(jnp.abs(r_slot))))
+    np.testing.assert_allclose(
+        np.asarray(tr.rewards), np.asarray(r_slot), atol=1e-4 * scale
+    )
+
+
+# --------------------------------------------------------------- metrics ----
+def test_summarize_metrics_consistent():
+    cfg = _cfg(seed=1)
+    spec, _, tr = _run(cfg, algorithm="fairness")
+    s = lifecycle.summarize(tr, spec)
+    assert s["completed"] <= s["arrived"]
+    assert s["jct_mean"] >= 1.0         # JCT counts whole slots
+    assert s["jct_p99"] >= s["jct_mean"]
+    assert s["slowdown_mean"] >= 1.0    # response time >= service time
+    assert 0.0 <= s["utilization"] <= 1.0
+    assert s["throughput"] == s["completed"] / cfg.T
+
+
+def test_residual_capacity_floors_at_zero():
+    cfg = _cfg(seed=0)
+    spec = trace.build_spec(cfg)
+    held = jnp.broadcast_to(
+        2.0 * jnp.max(spec.c), (spec.L, spec.R, spec.K)
+    ) * spec.mask[:, :, None]
+    res = graph.residual_capacity(spec, held)
+    assert (np.asarray(res) >= 0.0).all()
+    spec_res = graph.residual_spec(spec, jnp.zeros((spec.L, spec.R, spec.K)))
+    np.testing.assert_array_equal(np.asarray(spec_res.c), np.asarray(spec.c))

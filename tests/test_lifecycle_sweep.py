@@ -1,0 +1,74 @@
+"""Lifecycle grids through sweep.run_grid == the looped single-config path
+(simulator.run_all(mode="lifecycle")), for both OGA backends — the same
+parity pattern test_sweep.py pins for slot mode."""
+import numpy as np
+import pytest
+
+from repro.sched import sweep, trace
+from repro.sched.simulator import run_all
+
+BASE = trace.TraceConfig(T=60, L=6, R=16, K=4)
+ALGOS = ("ogasched", "fairness", "drf")
+
+
+def _assert_grid_matches_loop(points, traces, backend, algorithms=ALGOS):
+    for i, p in enumerate(points):
+        res = run_all(
+            p.cfg, eta0=p.eta0, decay=p.decay,
+            algorithms=algorithms, mode="lifecycle", backend=backend,
+        )
+        for name in algorithms:
+            want = res[name].rewards
+            got = np.asarray(traces[name].rewards)[i]
+            scale = max(1.0, np.abs(want).max())
+            np.testing.assert_allclose(
+                got, want, atol=1e-4 * scale, err_msg=f"config {i} ({name})"
+            )
+            # departure events are integral — counts must agree exactly
+            assert res[name].lifecycle["completed"] == float(
+                np.asarray(traces[name].departed)[i].sum()
+            )
+
+
+def test_lifecycle_grid_matches_looped_run_all_reference():
+    points = sweep.make_grid(BASE, eta0s=(10.0, 25.0), seeds=(0, 1))
+    batch = sweep.build_batch(points)
+    assert batch.works.shape == (4, BASE.T, BASE.L)
+    traces = sweep.run_grid(
+        batch, algorithms=ALGOS, mode="lifecycle", backend="reference"
+    )
+    for name in ALGOS:
+        assert traces[name].rewards.shape == (4, BASE.T)
+        assert traces[name].used.shape == (4, BASE.T, BASE.R, BASE.K)
+    _assert_grid_matches_loop(points, traces, "reference")
+
+
+def test_lifecycle_grid_matches_looped_run_all_fused():
+    # interpret-mode Pallas under vmap is interpreter-bound: keep it tiny.
+    cfg = trace.TraceConfig(T=40, L=6, R=16, K=4)
+    points = sweep.make_grid(cfg, eta0s=(10.0,), seeds=(0, 1))
+    batch = sweep.build_batch(points)
+    traces = sweep.run_grid(
+        batch, algorithms=("ogasched",), mode="lifecycle", backend="fused"
+    )
+    _assert_grid_matches_loop(points, traces, "fused", algorithms=("ogasched",))
+
+
+def test_lifecycle_grid_summarize():
+    points = sweep.make_grid(BASE, seeds=(0, 1, 2))
+    batch = sweep.build_batch(points)
+    traces = sweep.run_grid(
+        batch, algorithms=("ogasched", "fairness"), mode="lifecycle"
+    )
+    summ = sweep.summarize_lifecycle(traces, batch)
+    for metric in ("jct_mean", "jct_p99", "slowdown_mean", "utilization"):
+        for name in ("ogasched", "fairness"):
+            assert summ[f"{metric}/{name}"].shape == (3,)
+    assert (summ["slowdown_mean/fairness"] >= 1.0).all()
+    assert (summ["utilization/ogasched"] > 0.0).all()
+
+
+def test_run_grid_rejects_bad_mode():
+    batch = sweep.build_batch(sweep.make_grid(BASE))
+    with pytest.raises(ValueError):
+        sweep.run_grid(batch, mode="nope")

@@ -1,0 +1,89 @@
+"""Trace generation: vectorised burst windows pinned against the original
+Python loop, work sampling, and the run_all oracle-gating regression."""
+import numpy as np
+import pytest
+
+from repro.core import regret
+from repro.sched import trace
+from repro.sched.simulator import run_all
+
+
+def _burst_reference(starts: np.ndarray) -> np.ndarray:
+    """The pre-vectorisation O(T*L) loop, verbatim: each start opens a
+    BURST_LEN-slot window."""
+    burst = np.zeros_like(starts, dtype=bool)
+    for l in range(starts.shape[1]):
+        for t0 in np.nonzero(starts[:, l])[0]:
+            burst[t0 : t0 + trace.BURST_LEN, l] = True
+    return burst
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_burst_vectorisation_matches_loop(seed):
+    """The cumsum-window rewrite must reproduce the loop bit-for-bit, which
+    pins build_arrivals output across the change (same rng draw order)."""
+    cfg = trace.TraceConfig(T=500, L=10, seed=seed, burst_prob=0.05)
+    rng = np.random.default_rng(cfg.seed + 1)
+    rng.uniform(0, 2 * np.pi, (1, cfg.L))  # diurnal phase draw (same order)
+    starts = rng.uniform(size=(cfg.T, cfg.L)) < cfg.burst_prob
+    cum = np.cumsum(starts, axis=0)
+    burst = (cum - np.pad(cum, ((trace.BURST_LEN, 0), (0, 0)))[: cfg.T]) > 0
+    np.testing.assert_array_equal(burst, _burst_reference(starts))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_build_arrivals_windows_match_reference(seed):
+    """End-to-end: arrivals are Bernoulli(p) with p >= 0.95 inside every
+    reference burst window — the windows the vectorised path produced."""
+    cfg = trace.TraceConfig(T=400, L=8, seed=seed, burst_prob=0.08,
+                            diurnal=False, rho=0.0)
+    arr = np.asarray(trace.build_arrivals(cfg))
+    rng = np.random.default_rng(cfg.seed + 1)
+    starts = rng.uniform(size=(cfg.T, cfg.L)) < cfg.burst_prob
+    burst = _burst_reference(starts)
+    # rho=0, no diurnal: arrivals occur ONLY inside burst windows
+    assert not arr[~burst].any()
+    assert arr[burst].mean() > 0.85  # Bernoulli(0.95) inside windows
+
+
+def test_build_works_seeded_heavy_tailed():
+    cfg = trace.TraceConfig(T=4000, L=10, seed=0, work_mean=60.0)
+    w = np.asarray(trace.build_works(cfg))
+    assert w.shape == (cfg.T, cfg.L)
+    assert (w > 0).all()
+    assert w.mean() == pytest.approx(cfg.work_mean, rel=0.15)
+    assert w.max() > 4 * cfg.work_mean  # the tail produces elephants
+    w2 = np.asarray(trace.build_works(cfg))
+    np.testing.assert_array_equal(w, w2)  # seeded
+    cfg2 = trace.TraceConfig(T=4000, L=10, seed=1, work_mean=60.0)
+    assert not np.array_equal(w, np.asarray(trace.build_works(cfg2)))
+
+
+def test_make_lifecycle_shapes():
+    cfg = trace.TraceConfig(T=50, L=6, R=16, K=4)
+    spec, arr, works = trace.make_lifecycle(cfg)
+    assert arr.shape == works.shape == (50, 6)
+    assert spec.c.shape == (16, 4)
+
+
+# ----------------------------------------------- run_all oracle gating fix --
+def test_run_all_skips_oracle_without_ogasched(monkeypatch):
+    """with_regret=True used to burn oracle_iters of offline PGA even when
+    ogasched was not among the algorithms; the oracle must now only run
+    when its regret certificate has a consumer."""
+    calls = []
+    real = regret.offline_optimum
+    monkeypatch.setattr(
+        regret, "offline_optimum",
+        lambda *a, **kw: calls.append(1) or real(*a, **kw),
+    )
+    cfg = trace.TraceConfig(T=40, L=6, R=16, K=4)
+    res = run_all(cfg, algorithms=("fairness",), with_regret=True)
+    assert calls == []
+    assert res["fairness"].regret is None
+
+    res = run_all(cfg, algorithms=("ogasched",), with_regret=True,
+                  oracle_iters=50)
+    assert calls == [1]
+    assert res["ogasched"].regret is not None
+    assert res["ogasched"].regret_bound is not None

@@ -1,8 +1,16 @@
-"""Scenario-sweep throughput: one vmapped grid vs looping the simulator.
+"""Scenario-sweep throughput: resident vmapped grids vs the streaming driver.
 
-Emits configs/sec for ``sweep.run_grid`` (the whole (eta0, decay, seed, rho)
-grid as a single jitted computation) against the old one-config-at-a-time
-``run_all`` loop, both measured warm (compile excluded).
+Measures configs/sec at several grid sizes for ``sweep.run_grid`` (whole
+grid resident) and ``sweep.sweep_stream`` (generate/run/reduce per chunk),
+checks the two agree, and emits machine-readable records so the perf
+trajectory is tracked across PRs (benchmarks/run.py writes them to
+``BENCH_sweep.json``). Timed regions include host-side trace generation and
+the summary reduction — the full cost of answering "run this grid".
+
+Full mode adds the acceptance-scale demonstration: a 10,000-config
+slot-mode grid and a 2,000-config lifecycle grid through the streaming
+path, which never materializes full-grid (G, T, ...) tensors (peak memory
+is the chunk; ``sweep.grid_memory_bytes`` quantifies both).
 """
 from __future__ import annotations
 
@@ -13,59 +21,99 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.sched import sweep, trace
-from repro.sched.simulator import run_all
+
+# small per-config shape so grid-size scaling (not per-config cost)
+# dominates the measurement
+CFG = trace.TraceConfig(T=100, L=6, R=16, K=4)
+ALGOS = ("ogasched", "fairness")
+CHUNK = 64
 
 
-def _block(tree):
-    return jax.block_until_ready(jax.tree.leaves(tree)[0])
+def _points(G: int) -> list[sweep.SweepPoint]:
+    return sweep.make_grid(CFG, seeds=range(G))
 
 
-def run(quick: bool = True):
-    T = 200 if quick else 1000
-    R = 32 if quick else 128
-    base = trace.TraceConfig(T=T, L=8, R=R, K=6)
-    points = sweep.make_grid(
-        base,
-        eta0s=(10.0, 25.0),
-        decays=(0.999, 0.9999),
-        seeds=(0, 7),
-        rhos=(0.5, 0.9),
-    )
-    G = len(points)
-
-    _block(sweep.run_grid(sweep.build_batch(points)))  # warm (compile)
-    # Timed region includes build_batch's host-side trace generation so the
-    # comparison is fair: run_all regenerates traces inside the loop too.
+def _time_resident(points, mode: str) -> tuple[float, dict]:
     t0 = time.time()
-    rewards = sweep.run_grid(sweep.build_batch(points))
-    _block(rewards)
-    t_grid = time.time() - t0
+    batch = sweep.build_batch(points, mode=mode)
+    out = sweep.run_grid(batch, ALGOS, mode=mode)
+    summ = (
+        sweep.summarize_lifecycle(out, batch) if mode == "lifecycle"
+        else sweep.summarize(out)
+    )
+    jax.block_until_ready(jax.tree.leaves(summ))
+    return time.time() - t0, summ
 
-    p0 = points[0]
-    run_all(p0.cfg, eta0=p0.eta0, decay=p0.decay)  # warm the loop path
+
+def _time_streamed(points, mode: str, chunk: int) -> tuple[float, dict]:
     t0 = time.time()
-    loop_avg = []
-    for p in points:
-        res = run_all(p.cfg, eta0=p.eta0, decay=p.decay)
-        loop_avg.append(res["ogasched"].avg_reward)
-    t_loop = time.time() - t0
+    summ = sweep.sweep_stream(points, ALGOS, chunk_size=chunk, mode=mode)
+    return time.time() - t0, summ
 
-    grid_avg = sweep.summarize(
-        {k: np.asarray(v) for k, v in rewards.items()}
-    )["avg/ogasched"]
-    np.testing.assert_allclose(grid_avg, np.asarray(loop_avg), rtol=1e-4)
 
-    emit(
-        f"sweep.run_grid.G={G}.T={T}.R={R}",
-        t_grid * 1e6 / G,
-        f"configs_per_s={G / t_grid:.2f};speedup_vs_loop={t_loop / t_grid:.2f}x",
+def _record(name, mode, G, chunk, elapsed, records):
+    mem = sweep.grid_memory_bytes(CFG, G, mode=mode, algorithms=ALGOS)
+    peak = sweep.grid_memory_bytes(
+        CFG, min(chunk, G) if chunk else G, mode=mode, algorithms=ALGOS
     )
+    rec = {
+        "name": name,
+        "mode": mode,
+        "G": G,
+        "chunk_size": chunk,
+        "elapsed_s": round(elapsed, 4),
+        "configs_per_s": round(G / elapsed, 2),
+        "resident_bytes_est": mem["total"],
+        "streamed_peak_bytes_est": peak["total"],
+    }
+    records.append(rec)
     emit(
-        f"sweep.loop_run_all.G={G}.T={T}.R={R}",
-        t_loop * 1e6 / G,
-        f"configs_per_s={G / t_loop:.2f}",
+        f"sweep.{name}.{mode}.G={G}.T={CFG.T}.R={CFG.R}",
+        elapsed * 1e6 / G,
+        f"configs_per_s={rec['configs_per_s']};"
+        f"peak_bytes_est={rec['streamed_peak_bytes_est']}",
     )
+    return rec
+
+
+def run(quick: bool = True) -> list[dict]:
+    records: list[dict] = []
+
+    # warm both paths once so compile time stays out of every measurement
+    warm = _points(CHUNK)
+    _time_resident(warm, "slot")
+    _time_streamed(warm, "slot", CHUNK)
+
+    for G in (64, 256) if quick else (64, 256, 1024):
+        pts = _points(G)
+        _time_resident(pts, "slot")  # warm this G's program shape
+        t_res, s_res = _time_resident(pts, "slot")
+        _record("resident", "slot", G, 0, t_res, records)
+        t_str, s_str = _time_streamed(pts, "slot", CHUNK)
+        _record("streamed", "slot", G, CHUNK, t_str, records)
+        for k in s_res:  # streamed must be a pure reorganisation of work
+            np.testing.assert_allclose(s_str[k], s_res[k], err_msg=k)
+
+    # lifecycle: outputs are ~R*K/1 larger per config; stream a modest grid
+    G_life = 32 if quick else 256
+    life_pts = _points(G_life)
+    _time_streamed(life_pts[:16], "lifecycle", 16)  # warm
+    t_life, _ = _time_streamed(life_pts, "lifecycle", 16)
+    _record("streamed", "lifecycle", G_life, 16, t_life, records)
+
+    if not quick:
+        # acceptance scale: full-grid tensors for these would be resident
+        # gigabytes in lifecycle mode; the stream holds one chunk at a time
+        t10k, _ = _time_streamed(_points(10_000), "slot", 256)
+        _record("streamed", "slot", 10_000, 256, t10k, records)
+        t2k, _ = _time_streamed(_points(2_000), "lifecycle", 32)
+        _record("streamed", "lifecycle", 2_000, 32, t2k, records)
+
+    return records
 
 
 if __name__ == "__main__":
-    run()
+    import json
+
+    with open("BENCH_sweep.json", "w") as f:
+        json.dump(run(), f, indent=2)

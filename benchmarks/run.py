@@ -1,11 +1,15 @@
 """Benchmark driver — one section per paper table/figure + kernels +
 roofline. Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common).
+The sweep section additionally writes machine-readable ``BENCH_sweep.json``
+(configs/sec at several grid sizes, streamed vs resident peak-memory
+estimates) so the sweep-engine perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--full]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
@@ -13,6 +17,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale settings")
     ap.add_argument("--only", type=str, default="")
+    ap.add_argument(
+        "--sweep-json", type=str, default="BENCH_sweep.json",
+        help="where the sweep section writes its machine-readable records",
+    )
     args, _ = ap.parse_known_args()
     quick = not args.full
 
@@ -31,6 +39,12 @@ def main() -> None:
         bench_utilities,
     )
 
+    def sweep_section():
+        records = bench_sweep.run(quick)
+        with open(args.sweep_json, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"# wrote {len(records)} sweep records to {args.sweep_json}")
+
     sections = [
         ("fig2_reward", lambda: bench_reward.run(T=1000 if quick else 8000)),
         ("tab3_generality", lambda: bench_generality.run(quick)),
@@ -40,7 +54,7 @@ def main() -> None:
         ("fig6_contention", lambda: bench_contention.run(quick)),
         ("fig7_utilities", lambda: bench_utilities.run(quick)),
         ("thm1_regret", lambda: bench_regret.run(quick)),
-        ("sweep_throughput", lambda: bench_sweep.run(quick)),
+        ("sweep_throughput", sweep_section),
         ("lifecycle_jct", lambda: bench_lifecycle.run(quick)),
         ("kernels", lambda: bench_kernels.run(quick)),
         ("roofline", bench_roofline.run),

@@ -35,6 +35,11 @@ for p, avg, imp in zip(points, summary["avg/ogasched"],
     print(f"  eta0={p.eta0:5.1f} decay={p.decay:6.4f}  "
           f"avg_reward={avg:8.2f}  vs fairness {imp:+.2f}%")
 
+# Big grids stream in chunks instead (same numbers, O(chunk) memory, and
+# the grid axis shards over a device mesh when one is available):
+#   points = sweep.make_grid(cfg, seeds=range(10_000))
+#   summary = sweep.sweep_stream(points, chunk_size=256, sharded=True)
+
 # --- job lifecycle: jobs hold resources, depart, and report JCT -----------
 # (docs/lifecycle.md; mode="lifecycle" nets capacities by held allocations.)
 import dataclasses

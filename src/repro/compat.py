@@ -3,11 +3,30 @@
 ``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
 and renamed ``check_rep`` to ``check_vma`` along the way; this wrapper accepts
 the new-style call on either version. ``set_mesh`` falls back to the Mesh
-context manager that predates it.
+context manager that predates it. ``grid_mesh`` builds the 1-D
+all-local-devices mesh the sharded sweep engine lays grid axes over.
 """
 from __future__ import annotations
 
+from typing import Optional, Sequence
+
 import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def grid_mesh(axis: str = "grid", devices: Optional[Sequence] = None) -> Optional[Mesh]:
+    """1-D mesh over all local devices, or None on a single-device host.
+
+    The None return is the signal consumers (sweep.run_grid_sharded) use to
+    fall back to the plain single-device vmap path; constructed directly via
+    ``Mesh`` because ``jax.make_mesh`` does not take an explicit device list
+    on every supported jax version.
+    """
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if len(devs) <= 1:
+        return None
+    return Mesh(np.asarray(devs), (axis,))
 
 
 def set_mesh(mesh):

@@ -32,6 +32,32 @@ from repro.core.graph import ClusterSpec
 _BIG = 1e30
 
 
+def _rank_order(v: jax.Array) -> jax.Array:
+    """Stable ascending argsort of a short vector, without the sort primitive.
+
+    The port-order sort feeds ``_budgeted_fill``'s fori_loop as a
+    loop-invariant operand, and on jax 0.4.37's shard_map XLA:CPU miscompiles
+    exactly that pattern — a sort computed from sharded operands outside a
+    while loop and gathered inside it returns corrupted values on some
+    devices (sweep.run_grid_sharded exposed it; keeping the sort alive as a
+    program output makes it vanish, a fusion bug). Ranking by pairwise
+    comparison sidesteps the sort HLO entirely; at L <= a few dozen ports the
+    O(L^2) compare-reduce is noise, and the result is bit-identical to
+    ``jnp.argsort`` (stable, ties broken by index).
+    """
+    L = v.shape[0]
+    idx = jnp.arange(L)
+    lt = jnp.sum(v[None, :] < v[:, None], axis=1)
+    eq = jnp.sum(
+        (v[None, :] == v[:, None]) & (idx[None, :] < idx[:, None]), axis=1
+    )
+    rank = lt + eq  # position of element l in the sorted order
+    return jnp.sum(
+        jax.nn.one_hot(rank, L, dtype=jnp.int32) * idx.astype(jnp.int32)[:, None],
+        axis=0,
+    )
+
+
 def fairness_step(spec: ClusterSpec, x: jax.Array, w=None) -> jax.Array:
     """FAIRNESS: per (r,k), arrived port l gets share
     a_l^k / sum_{l' in L_r, arrived} a_{l'}^k of c_r^k, capped by a_l^k."""
@@ -97,14 +123,14 @@ def drf_step(spec: ClusterSpec, x: jax.Array, w=None) -> jax.Array:
     cap_l = jnp.einsum("lr,rk->lk", spec.mask, spec.c)  # (L, K) reachable cap
     s = jnp.max(spec.a / jnp.maximum(cap_l, 1e-9), axis=1)  # (L,)
     s = jnp.where(x > 0, s, _BIG)  # arrived ports first
-    order = jnp.argsort(s)
+    order = _rank_order(s)
     return _budgeted_fill(spec, x, w, order, node_score_sign=0.0)
 
 
 def binpacking_step(spec: ClusterSpec, x: jax.Array, w=None) -> jax.Array:
     """BINPACKING / MostAllocated: favour high-utilization instances."""
     w = _default_w(spec, "binpacking") if w is None else w
-    order = jnp.argsort(
+    order = _rank_order(
         jnp.where(x > 0, jnp.arange(spec.L, dtype=jnp.float32), _BIG)
     )
     return _budgeted_fill(spec, x, w, order, node_score_sign=+1.0)
@@ -113,7 +139,7 @@ def binpacking_step(spec: ClusterSpec, x: jax.Array, w=None) -> jax.Array:
 def spreading_step(spec: ClusterSpec, x: jax.Array, w=None) -> jax.Array:
     """SPREADING / LeastAllocated: favour low-utilization instances."""
     w = _default_w(spec, "spreading") if w is None else w
-    order = jnp.argsort(
+    order = _rank_order(
         jnp.where(x > 0, jnp.arange(spec.L, dtype=jnp.float32), _BIG)
     )
     return _budgeted_fill(spec, x, w, order, node_score_sign=-1.0)

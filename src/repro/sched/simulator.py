@@ -73,7 +73,13 @@ def run_all(
             )
             tr = jax.block_until_ready(tr)
             rewards = np.asarray(tr.rewards)
-            metrics = lifecycle.summarize(tr, spec)
+            # the jitted batched reduction on a single-row "grid" — the same
+            # code path sweep.summarize_lifecycle runs over whole grids
+            batched = lifecycle.summarize_batch(
+                jax.tree.map(lambda l: l[None], tr),
+                jax.tree.map(lambda l: l[None], spec),
+            )
+            metrics = {k: float(v[0]) for k, v in batched.items()}
         else:
             rewards = sweep.run_algorithm(
                 spec, arrivals, name,
@@ -98,9 +104,12 @@ def run_all(
 
 
 def improvement_over_baselines(results: dict[str, SimResult]) -> dict[str, float]:
+    """OGASCHED's percentage improvement per baseline, signed-safe
+    (sweep.improvement_pct): finite at zero-reward baselines and
+    sign-correct at negative ones."""
     oga = results["ogasched"].avg_reward
     return {
-        n: 100.0 * (oga / r.avg_reward - 1.0)
+        n: float(sweep.improvement_pct(oga, r.avg_reward))
         for n, r in results.items()
         if n != "ogasched"
     }

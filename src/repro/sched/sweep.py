@@ -8,33 +8,56 @@ arrival tensors are stacked on a leading grid axis on the host, then every
 algorithm's scan runs for all configurations simultaneously.
 
 Layers:
-  * ``make_grid``      — cartesian product of sweep axes -> list[SweepPoint].
-  * ``build_batch``    — host-side trace generation + leaf stacking.
-  * ``run_algorithm``  — single-config rewards; the one code path shared by
-                         ``simulator.run_all`` and the vectorised grid.
-  * ``run_grid``       — jit(vmap(run_algorithm)) over the stacked batch.
-  * ``summarize``      — per-config averages + improvement-over-baselines.
+  * ``make_grid``         — cartesian product of sweep axes -> list[SweepPoint].
+  * ``build_batch``       — host-side trace generation + leaf stacking
+                            (trace.make_batch; works only in lifecycle mode).
+  * ``run_algorithm``     — single-config rewards; the one code path shared by
+                            ``simulator.run_all`` and the vectorised grid.
+  * ``run_grid``          — jit(vmap(run_algorithm)) over the stacked batch.
+  * ``run_grid_sharded``  — the same grid with the G axis laid over a device
+                            mesh via shard_map (vmap fallback on one device).
+  * ``run_grid_stream`` / ``sweep_stream``
+                          — chunked driver: generate, run, and reduce the
+                            grid CHUNK_SIZE configs at a time, so 10k-config
+                            grids never materialize (G, T, ...) tensors.
+  * ``summarize`` / ``summarize_lifecycle``
+                          — per-config reductions (signed-safe improvement
+                            percentages; jitted lifecycle.summarize_batch).
 
 All sweep points must share (L, R, K, T) so stacked leaves are rectangular;
 everything else (adjacency, capacities, utility kinds, arrivals, eta0, decay)
 may vary per point.
+
+Memory model: a resident ``run_grid`` holds the stacked inputs AND every
+algorithm's outputs for all G configs at once — O(G·T) floats in slot mode
+but O(G·T·(L + R·K)) in lifecycle mode, which is why large lifecycle grids
+must go through the streaming driver (``grid_memory_bytes`` quantifies both).
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from functools import partial
-from typing import Optional, Sequence
+from functools import lru_cache, partial
+from typing import Iterator, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.core import baselines, ogasched
 from repro.core.graph import ClusterSpec
 from repro.sched import lifecycle, trace
 
 ALGORITHMS = ("ogasched",) + baselines.BASELINES
+
+MODES = ("slot", "lifecycle")
+
+
+def _check_mode(mode: str) -> None:
+    if mode not in MODES:
+        raise ValueError(f"mode must be 'slot' or 'lifecycle', got {mode!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,15 +73,18 @@ class SweepPoint:
 class SweepBatch:
     """Stacked operands for a grid of G configurations.
 
-    spec leaves, arrivals, and works carry a leading (G,) axis; ``points``
-    keeps the host-side provenance of each row (same order).
+    spec leaves, arrivals (and works, lifecycle mode only) carry a leading
+    (G,) axis; ``points`` keeps the host-side provenance of each row (same
+    order). ``works`` is genuinely optional: slot-mode grids never sample
+    job sizes, and ``run_grid(mode="lifecycle")`` rejects a batch without
+    them instead of silently running on garbage.
     """
 
-    spec: ClusterSpec          # every leaf (G, ...)
-    arrivals: jax.Array        # (G, T, L)
-    eta0: jax.Array            # (G,)
-    decay: jax.Array           # (G,)
-    works: jax.Array = None    # (G, T, L) job sizes (lifecycle mode)
+    spec: ClusterSpec                   # every leaf (G, ...)
+    arrivals: jax.Array                 # (G, T, L)
+    eta0: jax.Array                     # (G,)
+    decay: jax.Array                    # (G,)
+    works: Optional[jax.Array] = None   # (G, T, L) job sizes (lifecycle only)
     points: tuple[SweepPoint, ...] = ()
 
     @property
@@ -96,21 +122,26 @@ def make_grid(
     return points
 
 
-def build_batch(points: Sequence[SweepPoint]) -> SweepBatch:
-    """Generate every point's (spec, arrivals) on the host and stack them."""
+def build_batch(
+    points: Sequence[SweepPoint], mode: str = "slot"
+) -> SweepBatch:
+    """Generate every point's trace on the host and stack the leaves.
+
+    mode="lifecycle" additionally samples per-job work sizes
+    (trace.build_works); slot-mode batches carry ``works=None``.
+    """
+    _check_mode(mode)
     if not points:
         raise ValueError("empty sweep grid")
-    shapes = {(p.cfg.L, p.cfg.R, p.cfg.K, p.cfg.T) for p in points}
-    if len(shapes) > 1:
-        raise ValueError(f"sweep points must share (L, R, K, T); got {shapes}")
-    specs, arrs, works = zip(*(trace.make_lifecycle(p.cfg) for p in points))
-    spec = jax.tree.map(lambda *ls: jnp.stack(ls), *specs)
+    spec, arrivals, works = trace.make_batch(
+        [p.cfg for p in points], with_works=mode == "lifecycle"
+    )
     return SweepBatch(
         spec=spec,
-        arrivals=jnp.stack(arrs),
+        arrivals=arrivals,
         eta0=jnp.asarray([p.eta0 for p in points], jnp.float32),
         decay=jnp.asarray([p.decay for p in points], jnp.float32),
-        works=jnp.stack(works),
+        works=works,
         points=tuple(points),
     )
 
@@ -139,14 +170,40 @@ def run_algorithm(
     return baselines.run(spec, arrivals, name)
 
 
+# --------------------------------------------------------------------------
+# vmapped grid bodies — shared by the resident jits and the sharded path, so
+# the per-shard computation is the exact computation the one-device grid runs.
+# --------------------------------------------------------------------------
+
+def _vmap_slot(spec, arrivals, eta0, decay, *, name, proj_iters, backend):
+    if name == "ogasched":
+        return jax.vmap(
+            lambda s, a, e, d: run_algorithm(
+                s, a, name, eta0=e, decay=d,
+                proj_iters=proj_iters, backend=backend,
+            )
+        )(spec, arrivals, eta0, decay)
+    return jax.vmap(lambda s, a: baselines.run(s, a, name))(spec, arrivals)
+
+
+def _vmap_lifecycle(
+    spec, arrivals, works, eta0, decay, rate_floor,
+    *, name, proj_iters, backend, queue_depth,
+):
+    return jax.vmap(
+        lambda s, a, w, e, d: lifecycle.run(
+            s, a, w, name, eta0=e, decay=d, proj_iters=proj_iters,
+            backend=backend, queue_depth=queue_depth, rate_floor=rate_floor,
+        )
+    )(spec, arrivals, works, eta0, decay)
+
+
 @partial(jax.jit, static_argnames=("proj_iters", "backend"))
 def _run_grid_ogasched(spec, arrivals, eta0, decay, proj_iters, backend):
-    return jax.vmap(
-        lambda s, a, e, d: run_algorithm(
-            s, a, "ogasched", eta0=e, decay=d,
-            proj_iters=proj_iters, backend=backend,
-        )
-    )(spec, arrivals, eta0, decay)
+    return _vmap_slot(
+        spec, arrivals, eta0, decay,
+        name="ogasched", proj_iters=proj_iters, backend=backend,
+    )
 
 
 @partial(
@@ -157,12 +214,16 @@ def _run_grid_lifecycle(
     spec, arrivals, works, eta0, decay, rate_floor,
     name, proj_iters, backend, queue_depth,
 ):
-    return jax.vmap(
-        lambda s, a, w, e, d: lifecycle.run(
-            s, a, w, name, eta0=e, decay=d, proj_iters=proj_iters,
-            backend=backend, queue_depth=queue_depth, rate_floor=rate_floor,
-        )
-    )(spec, arrivals, works, eta0, decay)
+    return _vmap_lifecycle(
+        spec, arrivals, works, eta0, decay, rate_floor,
+        name=name, proj_iters=proj_iters, backend=backend,
+        queue_depth=queue_depth,
+    )
+
+
+def _algorithm_backend(name: str, backend: str) -> str:
+    """``backend`` selects the OGA update only; heuristics have no kernel."""
+    return backend if name == "ogasched" else "reference"
 
 
 def run_grid(
@@ -187,16 +248,20 @@ def run_grid(
     update because the grid vmaps whole scans and interpret-mode Pallas under
     vmap is needlessly slow off-TPU ("fused" composes on TPU).
     """
-    if mode not in ("slot", "lifecycle"):
-        raise ValueError(f"mode must be 'slot' or 'lifecycle', got {mode!r}")
+    _check_mode(mode)
+    if mode == "lifecycle" and batch.works is None:
+        raise ValueError(
+            "lifecycle grid needs job sizes: build_batch(points, "
+            "mode='lifecycle')"
+        )
     out: dict = {}
     for name in algorithms:
         if mode == "lifecycle":
             out[name] = _run_grid_lifecycle(
                 batch.spec, batch.arrivals, batch.works, batch.eta0,
                 batch.decay, jnp.asarray(rate_floor, jnp.float32),
-                name, proj_iters,
-                backend if name == "ogasched" else "reference", queue_depth,
+                name, proj_iters, _algorithm_backend(name, backend),
+                queue_depth,
             )
         elif name == "ogasched":
             out[name] = _run_grid_ogasched(
@@ -206,6 +271,269 @@ def run_grid(
         else:
             out[name] = baselines.run_batch(batch.spec, batch.arrivals, name)
     return out
+
+
+# --------------------------------------------------------------------------
+# Sharded grids: the G axis laid over a 1-D device mesh via shard_map. Each
+# device runs the plain vmapped grid on its G/n block — rows are independent,
+# so the program has no collectives and results match run_grid bitwise.
+# --------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def _sharded_grid_fn(
+    mesh: Mesh, name: str, mode: str, proj_iters: int, backend: str,
+    queue_depth: int,
+):
+    gspec = P(mesh.axis_names[0])
+    if mode == "lifecycle":
+        def body(spec, arrivals, works, eta0, decay, rate_floor):
+            return _vmap_lifecycle(
+                spec, arrivals, works, eta0, decay, rate_floor,
+                name=name, proj_iters=proj_iters, backend=backend,
+                queue_depth=queue_depth,
+            )
+        in_specs = (gspec, gspec, gspec, gspec, gspec, P())
+    else:
+        def body(spec, arrivals, eta0, decay):
+            return _vmap_slot(
+                spec, arrivals, eta0, decay,
+                name=name, proj_iters=proj_iters, backend=backend,
+            )
+        in_specs = (gspec, gspec, gspec, gspec)
+    return jax.jit(compat.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=gspec, check_vma=False,
+    ))
+
+
+def _pad_rows(tree, pad: int):
+    """Repeat the last grid row ``pad`` times on every leaf."""
+    if pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda l: jnp.concatenate([l, jnp.repeat(l[-1:], pad, axis=0)]), tree
+    )
+
+
+def run_grid_sharded(
+    batch: SweepBatch,
+    algorithms: Sequence[str] = ALGORITHMS,
+    *,
+    mesh: Optional[Mesh] = None,
+    backend: str = "reference",
+    proj_iters: int = 64,
+    mode: str = "slot",
+    queue_depth: int = 8,
+    rate_floor: float = 1e-3,
+) -> dict[str, jax.Array] | dict[str, lifecycle.LifecycleTrace]:
+    """``run_grid`` with the grid axis sharded over a device mesh.
+
+    ``mesh`` must be 1-D (any axis name); default is a mesh over all local
+    devices (compat.grid_mesh). On a single-device host this falls back
+    transparently to the resident vmap path, so callers can use it
+    unconditionally. Grids that do not divide the device count are padded
+    by repeating the last row, and the padding is sliced off the outputs.
+    """
+    _check_mode(mode)
+    if mesh is None:
+        mesh = compat.grid_mesh()
+    if mesh is None or mesh.size <= 1:
+        return run_grid(
+            batch, algorithms, backend=backend, proj_iters=proj_iters,
+            mode=mode, queue_depth=queue_depth, rate_floor=rate_floor,
+        )
+    if mode == "lifecycle" and batch.works is None:
+        raise ValueError(
+            "lifecycle grid needs job sizes: build_batch(points, "
+            "mode='lifecycle')"
+        )
+    G = batch.size
+    pad = (-G) % mesh.size
+    spec = _pad_rows(batch.spec, pad)
+    arrivals = _pad_rows(batch.arrivals, pad)
+    eta0 = _pad_rows(batch.eta0, pad)
+    decay = _pad_rows(batch.decay, pad)
+    out: dict = {}
+    for name in algorithms:
+        fn = _sharded_grid_fn(
+            mesh, name, mode, proj_iters,
+            _algorithm_backend(name, backend), queue_depth,
+        )
+        if mode == "lifecycle":
+            res = fn(
+                spec, arrivals, _pad_rows(batch.works, pad), eta0, decay,
+                jnp.asarray(rate_floor, jnp.float32),
+            )
+        else:
+            res = fn(spec, arrivals, eta0, decay)
+        out[name] = jax.tree.map(lambda l: l[:G], res) if pad else res
+    return out
+
+
+# --------------------------------------------------------------------------
+# Streaming grids: generate -> run -> reduce, one chunk at a time. A chunk is
+# the only resident (g, T, ...) tensor set; 10k-config grids stream through
+# in O(chunk_size) memory. The last partial chunk is padded to chunk_size so
+# every chunk reuses one compiled program, then trimmed before it is yielded.
+# --------------------------------------------------------------------------
+
+def iter_batches(
+    points: Sequence[SweepPoint],
+    chunk_size: int,
+    *,
+    mode: str = "slot",
+) -> Iterator[tuple[slice, SweepBatch]]:
+    """Yield ``(grid_slice, batch)`` chunks of a point list.
+
+    Each batch carries exactly ``chunk_size`` rows: a final partial chunk is
+    padded by repeating its already-generated last row (``_pad_rows``, no
+    extra trace generation), while ``points`` keeps only the real points.
+    ``grid_slice`` is the un-padded range of the full grid the chunk covers,
+    so ``batch.arrivals[: sl.stop - sl.start]`` are the real rows.
+    """
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    for start in range(0, len(points), chunk_size):
+        chunk = list(points[start:start + chunk_size])
+        batch = build_batch(chunk, mode=mode)
+        pad = chunk_size - len(chunk)
+        if pad:
+            batch = SweepBatch(
+                spec=_pad_rows(batch.spec, pad),
+                arrivals=_pad_rows(batch.arrivals, pad),
+                eta0=_pad_rows(batch.eta0, pad),
+                decay=_pad_rows(batch.decay, pad),
+                works=None if batch.works is None
+                else _pad_rows(batch.works, pad),
+                points=batch.points,
+            )
+        yield slice(start, start + len(chunk)), batch
+
+
+def run_grid_stream(
+    points: Sequence[SweepPoint],
+    algorithms: Sequence[str] = ALGORITHMS,
+    *,
+    chunk_size: int = 64,
+    mode: str = "slot",
+    sharded: bool = False,
+    backend: str = "reference",
+    proj_iters: int = 64,
+    queue_depth: int = 8,
+    rate_floor: float = 1e-3,
+) -> Iterator[tuple[slice, SweepBatch, dict]]:
+    """Stream a grid chunk by chunk: yields ``(grid_slice, batch, outputs)``.
+
+    Traces are generated, run, and handed back per chunk — at no point does
+    a (G, T, ...) tensor for the full grid exist on host or device. Both
+    the yielded batch and outputs are trimmed to the chunk's true size.
+    ``sharded=True`` routes each chunk through ``run_grid_sharded`` (chunks
+    then shard over the device mesh; keep chunk_size a multiple of the
+    device count to avoid padding).
+    """
+    runner = run_grid_sharded if sharded else run_grid
+    for sl, batch in iter_batches(points, chunk_size, mode=mode):
+        out = runner(
+            batch, algorithms, backend=backend, proj_iters=proj_iters,
+            mode=mode, queue_depth=queue_depth, rate_floor=rate_floor,
+        )
+        g = sl.stop - sl.start
+        if g < batch.size:
+            out = {n: jax.tree.map(lambda l: l[:g], v) for n, v in out.items()}
+            batch = SweepBatch(
+                spec=jax.tree.map(lambda l: l[:g], batch.spec),
+                arrivals=batch.arrivals[:g],
+                eta0=batch.eta0[:g],
+                decay=batch.decay[:g],
+                works=None if batch.works is None else batch.works[:g],
+                points=batch.points,
+            )
+        yield sl, batch, out
+
+
+def sweep_stream(
+    points: Sequence[SweepPoint],
+    algorithms: Sequence[str] = ALGORITHMS,
+    *,
+    chunk_size: int = 64,
+    mode: str = "slot",
+    sharded: bool = False,
+    backend: str = "reference",
+    proj_iters: int = 64,
+    queue_depth: int = 8,
+    rate_floor: float = 1e-3,
+) -> dict[str, np.ndarray]:
+    """Full-grid per-config summaries via the streaming driver.
+
+    Returns exactly what ``summarize`` (slot mode) / ``summarize_lifecycle``
+    (lifecycle mode) return for a resident ``run_grid`` of the same points —
+    {metric/name: (G,)} — but with peak memory bounded by ``chunk_size``
+    configs. Reduction happens per chunk; only the (G,)-sized summary rows
+    accumulate.
+    """
+    parts: dict[str, list[np.ndarray]] = {}
+    for _, batch, out in run_grid_stream(
+        points, algorithms, chunk_size=chunk_size, mode=mode,
+        sharded=sharded, backend=backend, proj_iters=proj_iters,
+        queue_depth=queue_depth, rate_floor=rate_floor,
+    ):
+        summ = (
+            summarize_lifecycle(out, batch) if mode == "lifecycle"
+            else summarize(out)
+        )
+        for k, v in summ.items():
+            parts.setdefault(k, []).append(np.asarray(v))
+    return {k: np.concatenate(v) for k, v in parts.items()}
+
+
+def grid_memory_bytes(
+    cfg: trace.TraceConfig,
+    G: int,
+    *,
+    mode: str = "slot",
+    algorithms: Sequence[str] = ALGORITHMS,
+    itemsize: int = 4,
+) -> dict[str, int]:
+    """Analytic resident-memory estimate for a G-config grid.
+
+    {"inputs": stacked spec/arrival/work bytes, "outputs": every algorithm's
+    result tensors, "total": both}. The streaming driver's peak is the same
+    formula evaluated at G=chunk_size (plus O(G) summary rows). Lifecycle
+    outputs dominate: a LifecycleTrace row costs T·(2 + 6L + R·K) floats vs
+    slot mode's T.
+    """
+    _check_mode(mode)
+    L, R, K, T = cfg.L, cfg.R, cfg.K, cfg.T
+    spec = L * R + L * K + 2 * R * K + 2 * K
+    inputs = spec + T * L + 2  # + arrivals + (eta0, decay)
+    per_alg = T  # slot-mode rewards
+    if mode == "lifecycle":
+        inputs += T * L  # works
+        per_alg = T * (2 + 6 * L + R * K)  # LifecycleTrace leaves
+    return {
+        "inputs": G * inputs * itemsize,
+        "outputs": G * per_alg * len(algorithms) * itemsize,
+        "total": G * (inputs + per_alg * len(algorithms)) * itemsize,
+    }
+
+
+# --------------------------------------------------------------------------
+# Reductions
+# --------------------------------------------------------------------------
+
+def improvement_pct(oga, base, eps: float = 1e-9):
+    """Signed-safe percentage improvement of ``oga`` over ``base``.
+
+    The naive ``100*(oga/base - 1)`` emits inf/NaN when a baseline's average
+    reward is 0 and flips sign when it is negative — and rewards are gain
+    *minus* communication penalty, so negative baseline averages are
+    reachable at high contention. This uses
+    ``100 * (oga - base) / max(|base|, eps)``: identical to the naive form
+    for positive baselines, finite everywhere, and its sign always matches
+    ``sign(oga - base)``.
+    """
+    oga = np.asarray(oga, np.float64)
+    base = np.asarray(base, np.float64)
+    return 100.0 * (oga - base) / np.maximum(np.abs(base), eps)
 
 
 def summarize(rewards: dict[str, jax.Array]) -> dict[str, np.ndarray]:
@@ -219,7 +547,9 @@ def summarize(rewards: dict[str, jax.Array]) -> dict[str, np.ndarray]:
         oga = out["avg/ogasched"]
         for n in rewards:
             if n != "ogasched":
-                out[f"improvement_pct/{n}"] = 100.0 * (oga / out[f"avg/{n}"] - 1.0)
+                out[f"improvement_pct/{n}"] = improvement_pct(
+                    oga, out[f"avg/{n}"]
+                )
     return out
 
 
@@ -228,15 +558,10 @@ def summarize_lifecycle(
 ) -> dict[str, np.ndarray]:
     """Per-config lifecycle metrics: {"<metric>/<name>": (G,)} for every
     scalar ``lifecycle.summarize`` reports (jct_mean, jct_p99,
-    slowdown_mean, utilization, ...)."""
-    out: dict[str, list] = {}
-    # one device->host transfer per leaf, then slice rows on the host
-    spec_np = jax.tree.map(np.asarray, batch.spec)
+    slowdown_mean, utilization, ...). One jitted reduction per algorithm
+    (lifecycle.summarize_batch) — no per-row Python loop."""
+    out: dict[str, np.ndarray] = {}
     for name, tr in traces.items():
-        tr_np = jax.tree.map(np.asarray, tr)
-        for g in range(batch.size):
-            row_tr = jax.tree.map(lambda leaf: leaf[g], tr_np)
-            row_spec = jax.tree.map(lambda leaf: leaf[g], spec_np)
-            for metric, v in lifecycle.summarize(row_tr, row_spec).items():
-                out.setdefault(f"{metric}/{name}", []).append(v)
-    return {k: np.asarray(v) for k, v in out.items()}
+        for metric, v in lifecycle.summarize_batch(tr, batch.spec).items():
+            out[f"{metric}/{name}"] = np.asarray(v)
+    return out

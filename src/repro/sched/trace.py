@@ -72,9 +72,24 @@ class TraceConfig:
 
 BURST_LEN = 20  # slots a burst keeps a port firing
 
+# Independent RNG streams per trace component. Seeding them ``cfg.seed``,
+# ``cfg.seed + 1``, ``cfg.seed + 2`` (the original scheme) correlates sweep
+# points with adjacent seeds — seed s's arrivals stream IS seed s+1's spec
+# stream — so a seed axis of a grid silently reuses randomness. SeedSequence
+# spawning derives statistically independent children from a single root
+# seed, and children of different roots are independent of each other.
+STREAMS = ("spec", "arrivals", "works")
+
+
+def stream_rng(seed: int, stream: str) -> np.random.Generator:
+    """The seeded generator for one trace component ("spec" | "arrivals" |
+    "works"). Tests that reconstruct a stream must derive it here."""
+    children = np.random.SeedSequence(seed).spawn(len(STREAMS))
+    return np.random.default_rng(children[STREAMS.index(stream)])
+
 
 def build_spec(cfg: TraceConfig) -> ClusterSpec:
-    rng = np.random.default_rng(cfg.seed)
+    rng = stream_rng(cfg.seed, "spec")
     # instances drawn from templates with +-20% jitter
     t_idx = rng.integers(0, len(MACHINE_TEMPLATES), cfg.R)
     c = MACHINE_TEMPLATES[t_idx][:, : cfg.K] * rng.uniform(
@@ -114,7 +129,7 @@ def build_spec(cfg: TraceConfig) -> ClusterSpec:
 
 def build_arrivals(cfg: TraceConfig, multi: bool = False) -> jax.Array:
     """(T, L) arrival indicators (or counts when ``multi``)."""
-    rng = np.random.default_rng(cfg.seed + 1)
+    rng = stream_rng(cfg.seed, "arrivals")
     base = np.full((cfg.T, cfg.L), cfg.rho)
     if cfg.diurnal:
         t = np.arange(cfg.T)[:, None]
@@ -144,7 +159,7 @@ def build_works(cfg: TraceConfig) -> jax.Array:
     traces are heavy-tailed; cf. heSRPT, arXiv:1903.09346). Seeded apart
     from the arrival stream so the two resample independently.
     """
-    rng = np.random.default_rng(cfg.seed + 2)
+    rng = stream_rng(cfg.seed, "works")
     scale = cfg.work_mean * (cfg.work_tail - 1.0) / cfg.work_tail
     w = scale * (1.0 + rng.pareto(cfg.work_tail, size=(cfg.T, cfg.L)))
     return jnp.asarray(w, jnp.float32)
@@ -158,3 +173,26 @@ def make(cfg: TraceConfig):
 def make_lifecycle(cfg: TraceConfig):
     """Convenience: (spec, arrivals, works) for lifecycle-mode runs."""
     return build_spec(cfg), build_arrivals(cfg), build_works(cfg)
+
+
+def make_batch(cfgs, with_works: bool = False):
+    """Stacked traces for a batch of configs: (spec, arrivals[, works]) with
+    every leaf carrying a leading (G,) axis.
+
+    All configs must share (L, R, K, T) so the stacked leaves are
+    rectangular. ``works`` is generated only when requested (lifecycle-mode
+    grids); slot-mode sweeps never pay for job-size sampling. This is the
+    per-chunk generation step of the streaming sweep driver
+    (``sweep.run_grid_stream``), so it must stay O(len(cfgs)) in memory.
+    """
+    cfgs = list(cfgs)
+    if not cfgs:
+        raise ValueError("empty trace batch")
+    shapes = {(c.L, c.R, c.K, c.T) for c in cfgs}
+    if len(shapes) > 1:
+        raise ValueError(f"trace configs must share (L, R, K, T); got {shapes}")
+    specs = [build_spec(c) for c in cfgs]
+    spec = jax.tree.map(lambda *ls: jnp.stack(ls), *specs)
+    arrivals = jnp.stack([build_arrivals(c) for c in cfgs])
+    works = jnp.stack([build_works(c) for c in cfgs]) if with_works else None
+    return spec, arrivals, works

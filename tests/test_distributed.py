@@ -3,9 +3,13 @@
 Runs in a subprocess so the 8-device host-platform flag does not leak into
 the rest of the test session (jax pins device count at first init).
 """
+import os
+import pathlib
 import subprocess
 import sys
 import textwrap
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
 
 
 def test_distributed_step_matches_single_device():
@@ -49,8 +53,8 @@ def test_distributed_step_matches_single_device():
         [sys.executable, "-c", script],
         capture_output=True,
         text=True,
-        env={**__import__("os").environ, "PYTHONPATH": "src"},
-        cwd="/root/repo",
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")},
+        cwd=REPO,
         timeout=300,
     )
     assert "DISTRIBUTED-OK" in res.stdout, res.stdout + res.stderr

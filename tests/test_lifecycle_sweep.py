@@ -1,6 +1,9 @@
 """Lifecycle grids through sweep.run_grid == the looped single-config path
 (simulator.run_all(mode="lifecycle")), for both OGA backends — the same
-parity pattern test_sweep.py pins for slot mode."""
+parity pattern test_sweep.py pins for slot mode — plus the jitted batched
+summarize (lifecycle.summarize_batch) against the per-row reference."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -32,7 +35,7 @@ def _assert_grid_matches_loop(points, traces, backend, algorithms=ALGOS):
 
 def test_lifecycle_grid_matches_looped_run_all_reference():
     points = sweep.make_grid(BASE, eta0s=(10.0, 25.0), seeds=(0, 1))
-    batch = sweep.build_batch(points)
+    batch = sweep.build_batch(points, mode="lifecycle")
     assert batch.works.shape == (4, BASE.T, BASE.L)
     traces = sweep.run_grid(
         batch, algorithms=ALGOS, mode="lifecycle", backend="reference"
@@ -47,7 +50,7 @@ def test_lifecycle_grid_matches_looped_run_all_fused():
     # interpret-mode Pallas under vmap is interpreter-bound: keep it tiny.
     cfg = trace.TraceConfig(T=40, L=6, R=16, K=4)
     points = sweep.make_grid(cfg, eta0s=(10.0,), seeds=(0, 1))
-    batch = sweep.build_batch(points)
+    batch = sweep.build_batch(points, mode="lifecycle")
     traces = sweep.run_grid(
         batch, algorithms=("ogasched",), mode="lifecycle", backend="fused"
     )
@@ -56,7 +59,7 @@ def test_lifecycle_grid_matches_looped_run_all_fused():
 
 def test_lifecycle_grid_summarize():
     points = sweep.make_grid(BASE, seeds=(0, 1, 2))
-    batch = sweep.build_batch(points)
+    batch = sweep.build_batch(points, mode="lifecycle")
     traces = sweep.run_grid(
         batch, algorithms=("ogasched", "fairness"), mode="lifecycle"
     )
@@ -72,3 +75,60 @@ def test_run_grid_rejects_bad_mode():
     batch = sweep.build_batch(sweep.make_grid(BASE))
     with pytest.raises(ValueError):
         sweep.run_grid(batch, mode="nope")
+
+
+def test_summarize_batch_matches_per_row_summarize():
+    """The jitted batched reduction must report exactly the per-row
+    ``lifecycle.summarize`` scalars — same keys, same values (fp32
+    tolerance), NaN where no job departed."""
+    import jax
+    from repro.sched import lifecycle
+
+    points = sweep.make_grid(BASE, eta0s=(10.0, 25.0), seeds=(0, 1))
+    batch = sweep.build_batch(points, mode="lifecycle")
+    traces = sweep.run_grid(
+        batch, algorithms=("ogasched", "spreading"), mode="lifecycle"
+    )
+    spec_np = jax.tree.map(np.asarray, batch.spec)
+    for name, tr in traces.items():
+        got = {k: np.asarray(v) for k, v in
+               lifecycle.summarize_batch(tr, batch.spec).items()}
+        tr_np = jax.tree.map(np.asarray, tr)
+        for g in range(batch.size):
+            want = lifecycle.summarize(
+                jax.tree.map(lambda leaf: leaf[g], tr_np),
+                jax.tree.map(lambda leaf: leaf[g], spec_np),
+            )
+            assert set(got) == set(want)
+            for metric, v in want.items():
+                if np.isnan(v):
+                    assert np.isnan(got[metric][g]), (name, metric, g)
+                else:
+                    np.testing.assert_allclose(
+                        got[metric][g], v, rtol=2e-4,
+                        err_msg=f"{metric}/{name}[{g}]",
+                    )
+
+
+def test_summarize_batch_nan_on_empty_departures():
+    """A config where nothing ever departs must report NaN JCT metrics (not
+    garbage from the masked reduction) and zero completions."""
+    import jax
+    from repro.sched import lifecycle
+
+    points = sweep.make_grid(BASE, seeds=(0,))
+    batch = sweep.build_batch(points, mode="lifecycle")
+    tr = sweep.run_grid(
+        batch, algorithms=("ogasched",), mode="lifecycle"
+    )["ogasched"]
+    # zero every departure event
+    dead = dataclasses.replace(
+        tr,
+        departed=jax.numpy.zeros_like(tr.departed),
+        jct=jax.numpy.zeros_like(tr.jct),
+        svc_slots=jax.numpy.zeros_like(tr.svc_slots),
+    )
+    out = lifecycle.summarize_batch(dead, batch.spec)
+    assert out["completed"][0] == 0.0
+    for metric in ("jct_mean", "jct_p99", "slowdown_mean"):
+        assert np.isnan(np.asarray(out[metric])[0]), metric

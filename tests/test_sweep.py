@@ -30,6 +30,20 @@ def test_build_batch_rejects_mixed_shapes():
         sweep.build_batch([])
 
 
+def test_works_optional_per_mode():
+    """Slot-mode batches never sample job sizes; lifecycle grids require
+    them explicitly instead of running on a None works tensor."""
+    points = sweep.make_grid(BASE, seeds=(0, 1))
+    slot = sweep.build_batch(points)
+    assert slot.works is None
+    life = sweep.build_batch(points, mode="lifecycle")
+    assert life.works.shape == (2, BASE.T, BASE.L)
+    with pytest.raises(ValueError):
+        sweep.run_grid(slot, mode="lifecycle")
+    with pytest.raises(ValueError):
+        sweep.build_batch(points, mode="nope")
+
+
 def test_run_grid_matches_looped_run_all():
     """Acceptance: >= 16 configs, per-config rewards identical (within fp32
     tolerance) to looping simulator.run_all — same traces, same algorithms."""
@@ -71,18 +85,59 @@ def test_summarize_reports_improvements():
 def test_run_all_improvements_golden():
     """Regression pin: improvement-over-baselines under a fixed trace seed.
 
-    Golden values recorded from the reference backend on CPU (jax 0.4.37);
-    the loose tolerance absorbs cross-version float drift, not behaviour
-    changes (a real regression moves these by whole points)."""
+    Golden values recorded from the reference backend on CPU (jax 0.4.37),
+    re-pinned when SeedSequence stream derivation replaced the correlated
+    seed/seed+1/seed+2 scheme; the loose tolerance absorbs cross-version
+    float drift, not behaviour changes (a real regression moves these by
+    whole points)."""
     cfg = trace.TraceConfig(T=300, L=8, R=32, K=6, seed=7, contention=10.0)
     res = run_all(cfg)
     got = improvement_over_baselines(res)
     golden = {
-        "drf": 12.14,
-        "fairness": 8.88,
-        "binpacking": 10.47,
-        "spreading": 10.47,
+        "drf": 9.93,
+        "fairness": 8.73,
+        "binpacking": 9.66,
+        "spreading": 9.66,
     }
     assert set(got) == set(golden)
     for name, want in golden.items():
         assert got[name] == pytest.approx(want, abs=0.75), (name, got[name])
+
+
+# ------------------------------------------- signed-safe improvement pct --
+def test_improvement_pct_negative_and_zero_baselines():
+    """Regression: 100*(oga/base - 1) flipped sign for negative baselines
+    (rewards are gain minus comm penalty, so they go negative under high
+    contention) and emitted inf/NaN at zero. The signed-safe definition
+    must be finite everywhere with sign(improvement) == sign(oga - base),
+    and must agree with the naive formula on positive baselines."""
+    assert sweep.improvement_pct(110.0, 100.0) == pytest.approx(10.0)
+    # negative baseline: OGA better -> improvement must be POSITIVE
+    assert sweep.improvement_pct(1.0, -2.0) == pytest.approx(150.0)
+    assert sweep.improvement_pct(-1.0, -2.0) == pytest.approx(50.0)
+    # OGA worse than a negative baseline -> negative
+    assert sweep.improvement_pct(-3.0, -2.0) == pytest.approx(-50.0)
+    # zero baseline: finite, sign-correct
+    assert np.isfinite(sweep.improvement_pct(1.0, 0.0))
+    assert sweep.improvement_pct(1.0, 0.0) > 0
+    assert sweep.improvement_pct(-1.0, 0.0) < 0
+    # vectorised over grid rows, inf/NaN never escape
+    out = sweep.improvement_pct(
+        np.array([1.0, 1.0, 1.0]), np.array([0.5, 0.0, -0.5])
+    )
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out[0], 100.0)
+    assert (out > 0).all()
+
+
+def test_summarize_finite_with_negative_reward_baseline():
+    """End-to-end: a summarized grid whose baseline rewards average negative
+    must produce finite, sign-correct improvement percentages."""
+    fake = {
+        "ogasched": np.full((2, 4), 1.0),
+        "spreading": np.array([[-2.0] * 4, [0.0] * 4]),
+    }
+    summ = sweep.summarize(fake)
+    imp = summ["improvement_pct/spreading"]
+    assert np.isfinite(imp).all()
+    assert (imp > 0).all()  # oga avg 1.0 beats both -2.0 and 0.0

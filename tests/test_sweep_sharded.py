@@ -1,0 +1,99 @@
+"""Sharded grid (shard_map over a device mesh) == single-device vmap grid.
+
+The multi-device half runs in a subprocess so the 8-device host-platform
+flag does not leak into the rest of the session (jax pins the device count
+at first init) — the same pattern as tests/test_distributed.py. Equality is
+bitwise: grid rows are independent, the sharded program has no collectives,
+and the budgeted heuristics' port ordering avoids the sort primitive
+(baselines._rank_order) precisely so sharding cannot perturb results.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro.sched import sweep, trace
+
+BASE = trace.TraceConfig(T=40, L=6, R=16, K=4)
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_sharded_falls_back_to_vmap_on_one_device():
+    """On a single-device host run_grid_sharded must transparently produce
+    the plain resident grid (mesh=None path), for both modes."""
+    points = sweep.make_grid(BASE, seeds=(0, 1))
+    batch = sweep.build_batch(points)
+    ref = sweep.run_grid(batch, ("ogasched", "drf"))
+    got = sweep.run_grid_sharded(batch, ("ogasched", "drf"))
+    for name in ref:
+        np.testing.assert_array_equal(
+            np.asarray(got[name]), np.asarray(ref[name]), err_msg=name
+        )
+
+
+def test_sharded_matches_vmap_multi_device():
+    """8 host devices, G=6 (padded to 8): slot + lifecycle grids, every
+    algorithm, reference + fused OGA backends — all bitwise-equal to the
+    single-mesh vmap path."""
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        import numpy as np
+        from repro.sched import sweep, trace
+
+        assert jax.device_count() == 8
+        BASE = trace.TraceConfig(T=40, L=6, R=16, K=4)
+        points = sweep.make_grid(BASE, eta0s=(10.0, 25.0), seeds=(0, 1, 2))
+        assert len(points) == 6  # does not divide 8: exercises padding
+
+        batch = sweep.build_batch(points)
+        ref = sweep.run_grid(batch)
+        sh = sweep.run_grid_sharded(batch)
+        for name in ref:
+            np.testing.assert_array_equal(
+                np.asarray(sh[name]), np.asarray(ref[name]), err_msg=name
+            )
+
+        life = sweep.build_batch(points, mode="lifecycle")
+        lref = sweep.run_grid(life, mode="lifecycle")
+        lsh = sweep.run_grid_sharded(life, mode="lifecycle")
+        for name in lref:
+            for got, want in zip(
+                jax.tree.leaves(lsh[name]), jax.tree.leaves(lref[name])
+            ):
+                np.testing.assert_array_equal(
+                    np.asarray(got), np.asarray(want), err_msg=name
+                )
+
+        fref = sweep.run_grid(
+            batch, algorithms=("ogasched",), backend="fused"
+        )
+        fsh = sweep.run_grid_sharded(
+            batch, algorithms=("ogasched",), backend="fused"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(fsh["ogasched"]), np.asarray(fref["ogasched"])
+        )
+
+        # streaming + sharding compose: chunks shard over the mesh
+        streamed = sweep.sweep_stream(points, chunk_size=4, sharded=True)
+        full = sweep.summarize(ref)
+        for k in full:
+            np.testing.assert_allclose(streamed[k], full[k], err_msg=k)
+        print("SHARDED-SWEEP-OK")
+        """
+    )
+    res = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")},
+        cwd=REPO,
+        timeout=540,
+    )
+    assert "SHARDED-SWEEP-OK" in res.stdout, res.stdout + res.stderr

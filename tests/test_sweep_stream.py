@@ -1,0 +1,95 @@
+"""Streaming sweep driver == one-shot resident run_grid, on grids that do
+NOT divide evenly by the chunk size (the padded final chunk must be invisible
+in the results), for slot and lifecycle modes."""
+import numpy as np
+import pytest
+
+from repro.sched import sweep, trace
+
+BASE = trace.TraceConfig(T=60, L=6, R=16, K=4)
+ALGOS = ("ogasched", "fairness", "drf")
+
+
+def test_iter_batches_pads_and_slices():
+    points = sweep.make_grid(BASE, seeds=(0, 1, 2, 3, 4))  # 5 points
+    chunks = list(sweep.iter_batches(points, 2))
+    assert [(sl.start, sl.stop) for sl, _ in chunks] == [(0, 2), (2, 4), (4, 5)]
+    # every chunk is padded to exactly chunk_size rows for jit-cache reuse
+    assert all(b.size == 2 for _, b in chunks)
+    # the pad row repeats the last real point
+    last = chunks[-1][1]
+    np.testing.assert_array_equal(
+        np.asarray(last.arrivals[0]), np.asarray(last.arrivals[1])
+    )
+    with pytest.raises(ValueError):
+        list(sweep.iter_batches(points, 0))
+
+
+def test_stream_matches_resident_slot():
+    """7 points, chunk 3 -> chunks of 3+3+1(padded): per-config rewards and
+    summaries must equal the one-shot grid exactly."""
+    points = sweep.make_grid(BASE, eta0s=(10.0, 25.0), seeds=(0, 1, 2, 3))[:7]
+    assert len(points) % 3 != 0
+    batch = sweep.build_batch(points)
+    resident = sweep.run_grid(batch, ALGOS)
+
+    seen = 0
+    for sl, chunk_batch, out in sweep.run_grid_stream(
+        points, ALGOS, chunk_size=3
+    ):
+        g = sl.stop - sl.start
+        assert chunk_batch.arrivals.shape[0] == g  # trimmed, not padded
+        for name in ALGOS:
+            np.testing.assert_array_equal(
+                np.asarray(out[name]), np.asarray(resident[name])[sl],
+                err_msg=f"{name} chunk {sl}",
+            )
+        seen += g
+    assert seen == len(points)
+
+    streamed = sweep.sweep_stream(points, ALGOS, chunk_size=3)
+    full = sweep.summarize(resident)
+    assert set(streamed) == set(full)
+    for k in full:
+        np.testing.assert_allclose(streamed[k], full[k], err_msg=k)
+
+
+def test_stream_matches_resident_lifecycle():
+    import jax
+
+    points = sweep.make_grid(BASE, seeds=(0, 1, 2, 3, 4))  # 5 points, chunk 2
+    batch = sweep.build_batch(points, mode="lifecycle")
+    resident = sweep.run_grid(
+        batch, ("ogasched", "fairness"), mode="lifecycle"
+    )
+    for sl, _, out in sweep.run_grid_stream(
+        points, ("ogasched", "fairness"), chunk_size=2, mode="lifecycle"
+    ):
+        for name, tr in out.items():
+            for got, want in zip(
+                jax.tree.leaves(tr), jax.tree.leaves(resident[name])
+            ):
+                np.testing.assert_array_equal(
+                    np.asarray(got), np.asarray(want)[sl],
+                    err_msg=f"{name} chunk {sl}",
+                )
+    streamed = sweep.sweep_stream(
+        points, ("ogasched", "fairness"), chunk_size=2, mode="lifecycle"
+    )
+    full = sweep.summarize_lifecycle(resident, batch)
+    assert set(streamed) == set(full)
+    for k in full:
+        np.testing.assert_allclose(
+            streamed[k], full[k], rtol=1e-6, err_msg=k
+        )
+
+
+def test_grid_memory_bytes_model():
+    """The memory model must scale linearly in G and dominate in lifecycle
+    mode (that asymmetry is why the streaming driver exists)."""
+    m1 = sweep.grid_memory_bytes(BASE, 100)
+    m2 = sweep.grid_memory_bytes(BASE, 200)
+    assert m2["total"] == 2 * m1["total"]
+    life = sweep.grid_memory_bytes(BASE, 100, mode="lifecycle")
+    assert life["outputs"] > 50 * m1["outputs"]
+    assert m1["total"] == m1["inputs"] + m1["outputs"]

@@ -1,11 +1,25 @@
 """Trace generation: vectorised burst windows pinned against the original
-Python loop, work sampling, and the run_all oracle-gating regression."""
+Python loop, work sampling, RNG-stream independence, batched generation,
+and the run_all oracle-gating regression."""
+import dataclasses
+
+import jax
 import numpy as np
 import pytest
 
 from repro.core import regret
 from repro.sched import trace
 from repro.sched.simulator import run_all
+
+# Golden values recorded after the SeedSequence stream derivation landed
+# (T=64, L=4, R=8, K=4, seed=0).
+GOLD = {
+    "arr_sum": 172.0,
+    "c0": [186.08457946777344, 190.6587371826172,
+           3.2906835079193115, 4.51026725769043],
+    "works0": [65.13224792480469, 33.19815444946289,
+               55.07301712036133, 88.05870819091797],
+}
 
 
 def _burst_reference(starts: np.ndarray) -> np.ndarray:
@@ -23,7 +37,7 @@ def test_burst_vectorisation_matches_loop(seed):
     """The cumsum-window rewrite must reproduce the loop bit-for-bit, which
     pins build_arrivals output across the change (same rng draw order)."""
     cfg = trace.TraceConfig(T=500, L=10, seed=seed, burst_prob=0.05)
-    rng = np.random.default_rng(cfg.seed + 1)
+    rng = trace.stream_rng(cfg.seed, "arrivals")
     rng.uniform(0, 2 * np.pi, (1, cfg.L))  # diurnal phase draw (same order)
     starts = rng.uniform(size=(cfg.T, cfg.L)) < cfg.burst_prob
     cum = np.cumsum(starts, axis=0)
@@ -38,12 +52,49 @@ def test_build_arrivals_windows_match_reference(seed):
     cfg = trace.TraceConfig(T=400, L=8, seed=seed, burst_prob=0.08,
                             diurnal=False, rho=0.0)
     arr = np.asarray(trace.build_arrivals(cfg))
-    rng = np.random.default_rng(cfg.seed + 1)
+    rng = trace.stream_rng(cfg.seed, "arrivals")
     starts = rng.uniform(size=(cfg.T, cfg.L)) < cfg.burst_prob
     burst = _burst_reference(starts)
     # rho=0, no diurnal: arrivals occur ONLY inside burst windows
     assert not arr[~burst].any()
     assert arr[burst].mean() > 0.85  # Bernoulli(0.95) inside windows
+
+
+# ------------------------------------------------ RNG stream independence --
+def test_streams_independent_across_adjacent_seeds():
+    """Regression: streams used to be seeded seed, seed+1, seed+2, so seed
+    s's arrivals rng was bit-identical to seed s+1's spec rng and a seed
+    axis of a sweep silently reused randomness. SeedSequence spawning must
+    give every (seed, stream) pair its own stream."""
+    draws = {}
+    for seed in (0, 1, 2, 3):
+        for stream in trace.STREAMS:
+            draws[(seed, stream)] = trace.stream_rng(seed, stream).uniform(
+                size=64
+            )
+    keys = list(draws)
+    for i, k1 in enumerate(keys):
+        for k2 in keys[i + 1:]:
+            assert not np.array_equal(draws[k1], draws[k2]), (k1, k2)
+    # the exact historical collision, spelled out:
+    assert not np.array_equal(
+        trace.stream_rng(0, "arrivals").uniform(size=64),
+        trace.stream_rng(1, "spec").uniform(size=64),
+    )
+
+
+def test_trace_golden_pins():
+    """Pin the post-SeedSequence traces: any future change to stream
+    derivation or draw order must update these deliberately."""
+    cfg = trace.TraceConfig(T=64, L=4, R=8, K=4, seed=0)
+    spec, arr, works = trace.make_lifecycle(cfg)
+    assert float(jax.numpy.sum(arr)) == pytest.approx(GOLD["arr_sum"])
+    np.testing.assert_allclose(
+        np.asarray(spec.c[0]), GOLD["c0"], rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(works[0]), GOLD["works0"], rtol=1e-6
+    )
 
 
 def test_build_works_seeded_heavy_tailed():
@@ -64,6 +115,29 @@ def test_make_lifecycle_shapes():
     spec, arr, works = trace.make_lifecycle(cfg)
     assert arr.shape == works.shape == (50, 6)
     assert spec.c.shape == (16, 4)
+
+
+def test_make_batch_stacks_per_config_traces():
+    cfgs = [trace.TraceConfig(T=30, L=4, R=8, K=4, seed=s) for s in range(3)]
+    spec, arr, works = trace.make_batch(cfgs)
+    assert works is None  # slot mode: job sizes never sampled
+    assert arr.shape == (3, 30, 4)
+    assert spec.c.shape == (3, 8, 4)
+    spec_b, arr_b, works_b = trace.make_batch(cfgs, with_works=True)
+    assert works_b.shape == (3, 30, 4)
+    for g, cfg in enumerate(cfgs):
+        s1, a1, w1 = trace.make_lifecycle(cfg)
+        np.testing.assert_array_equal(np.asarray(arr[g]), np.asarray(a1))
+        np.testing.assert_array_equal(np.asarray(works_b[g]), np.asarray(w1))
+        for l_b, l_1 in zip(jax.tree.leaves(
+                jax.tree.map(lambda l: l[g], spec_b)), jax.tree.leaves(s1)):
+            np.testing.assert_array_equal(np.asarray(l_b), np.asarray(l_1))
+    with pytest.raises(ValueError):
+        trace.make_batch([])
+    with pytest.raises(ValueError):
+        trace.make_batch(
+            [cfgs[0], dataclasses.replace(cfgs[0], R=16)]
+        )
 
 
 # ----------------------------------------------- run_all oracle gating fix --

@@ -1,6 +1,10 @@
 """Kernel microbenchmarks: Pallas (interpret mode on CPU — correctness
 artifact; timings indicative only) vs jnp reference vs paper-verbatim Alg.1.
 On TPU the same entry points dispatch to compiled Pallas (kernels/ops.py).
+
+Returns machine-readable records; ``benchmarks/run.py`` writes them to
+``BENCH_kernels.json`` (projection + fused-step timings) so the kernel perf
+trajectory is tracked across PRs alongside ``BENCH_sweep.json``.
 """
 from __future__ import annotations
 
@@ -13,29 +17,60 @@ import numpy as np
 from benchmarks.common import emit, timed
 from repro.core import projection
 from repro.kernels import ref
-from repro.kernels.proj_bisect import proj_bisect
+from repro.kernels.proj_bisect import ITERS, proj_bisect
 
 
-def run(quick: bool = True):
-    N, L = (256, 64) if quick else (768, 128)  # N = R*K cells
+def run(quick: bool = True) -> list[dict]:
+    records: list[dict] = []
+
+    def rec(name: str, us: float, **extra):
+        records.append({"name": name, "us_per_call": round(us, 2), **extra})
+
+    # Projection at two row shapes: the production regime (rows = (r, k)
+    # cells, lanes = L ports, L small) where the exact breakpoint sweep's
+    # O(L) passes beat 64 bisection passes, and a wide-lane shape where the
+    # sweep's all-pairs (N, 2L, L) evaluation loses to bisection — the
+    # crossover documented in docs/kernels.md and the reason the TPU kernel
+    # keeps (seeded, shortened) bisection.
     key = jax.random.PRNGKey(0)
     kz, ka, kc = jax.random.split(key, 3)
+    shapes = [(768, 10), (256, 64)] if quick else [(3072, 16), (768, 128)]
+    for N, L in shapes:
+        z = jax.random.normal(kz, (N, L)) * 5
+        a = jax.random.uniform(ka, (N, L), minval=0.1, maxval=4.0)
+        mask = jnp.ones((N, L))
+        c = jax.random.uniform(kc, (N,), minval=0.5, maxval=8.0)
+
+        jit_ref = jax.jit(ref.proj_rows_ref)
+        jit_ref(z, a, mask, c).block_until_ready()
+        _, us = timed(jit_ref, z, a, mask, c, repeats=20)
+        emit(f"kernel.proj.jnp_bisect64.N={N}.L={L}", us, "")
+        rec("kernel.proj.jnp_bisect64", us, N=N, L=L)
+
+        jit_sorted = jax.jit(ref.proj_rows_sorted)
+        out_s = jit_sorted(z, a, mask, c).block_until_ready()
+        _, us_s = timed(jit_sorted, z, a, mask, c, repeats=20)
+        err_s = float(jnp.max(jnp.abs(out_s - jit_ref(z, a, mask, c))))
+        emit(f"kernel.proj.jnp_sorted.N={N}.L={L}", us_s,
+             f"max_err_vs_bisect64={err_s:.2e}")
+        rec("kernel.proj.jnp_sorted", us_s, N=N, L=L,
+            speedup_vs_bisect64=round(us / max(us_s, 1e-9), 2))
+
+    N, L = shapes[0]  # the remaining kernels run at the production shape
     z = jax.random.normal(kz, (N, L)) * 5
     a = jax.random.uniform(ka, (N, L), minval=0.1, maxval=4.0)
     mask = jnp.ones((N, L))
     c = jax.random.uniform(kc, (N,), minval=0.5, maxval=8.0)
-
     jit_ref = jax.jit(ref.proj_rows_ref)
-    jit_ref(z, a, mask, c).block_until_ready()
-    _, us = timed(jit_ref, z, a, mask, c, repeats=20)
-    emit("kernel.proj.jnp_bisect", us, f"N={N};L={L}")
 
     out_k = proj_bisect(z, a, mask, c, interpret=True)
     _, us_k = timed(
         lambda: proj_bisect(z, a, mask, c, interpret=True), repeats=3
     )
     err = float(jnp.max(jnp.abs(out_k - jit_ref(z, a, mask, c))))
-    emit("kernel.proj.pallas_interpret", us_k, f"max_err_vs_ref={err:.2e}")
+    emit("kernel.proj.pallas_interpret", us_k,
+         f"iters={ITERS};max_err_vs_ref={err:.2e}")
+    rec("kernel.proj.pallas_interpret", us_k, iters=ITERS)
 
     # paper Algorithm 1 (sort + set iteration), single-threaded numpy
     zs, as_, cs = np.asarray(z), np.asarray(a), np.asarray(c)
@@ -44,24 +79,33 @@ def run(quick: bool = True):
         projection.project_alg1_np(zs[i], as_[i], float(cs[i]))
     us_alg1 = (time.time() - t0) / min(N, 64) * 1e6
     emit("kernel.proj.paper_alg1_per_cell", us_alg1, "sort+loop, 1 cell")
+    rec("kernel.proj.paper_alg1_per_cell", us_alg1)
 
     # fused OGA step vs unfused pipeline (flop-identical, 1/3 HBM traffic)
-    from repro.kernels.oga_step import oga_step_fused
+    from repro.kernels.oga_step import oga_step_fused, pack_scal
 
     x = (jax.random.uniform(kz, (N, L)) < 0.7).astype(jnp.float32)
     kstar = (jax.random.uniform(ka, (N, L)) < 0.2).astype(jnp.float32)
-    scal = jnp.stack(
-        [jnp.full((N,), 1.2), jnp.full((N,), 0.4), c,
-         jnp.asarray(np.arange(N) % 4, jnp.float32), jnp.full((N,), 0.5)],
-        axis=1,
+    scal = pack_scal(
+        jnp.full((N,), 1.2), jnp.full((N,), 0.4), c,
+        jnp.asarray(np.arange(N) % 4, jnp.float32), jnp.full((N,), 0.5),
     )
+    jit_bis = jax.jit(lambda *args: ref.oga_step_ref(*args, proj="bisect"))
+    jit_bis(z, a, mask, x, kstar, scal).block_until_ready()
+    _, us_b = timed(jit_bis, z, a, mask, x, kstar, scal, repeats=20)
+    emit("kernel.oga_step.rows_bisect64", us_b, "grad+axpy+bisect64 rows")
+    rec("kernel.oga_step.rows_bisect64", us_b, N=N, L=L)
     jit_unfused = jax.jit(ref.oga_step_ref)
     jit_unfused(z, a, mask, x, kstar, scal).block_until_ready()
     _, us_u = timed(jit_unfused, z, a, mask, x, kstar, scal, repeats=20)
-    emit("kernel.oga_step.unfused_jnp", us_u, "grad+axpy+proj (3 HBM passes)")
+    emit("kernel.oga_step.rows_sorted", us_u,
+         "grad+axpy+sorted rows (production off-TPU fused path)")
+    rec("kernel.oga_step.rows_sorted", us_u, N=N, L=L,
+        speedup_vs_bisect64=round(us_b / max(us_u, 1e-9), 2))
     out_f = oga_step_fused(z, a, mask, x, kstar, scal, interpret=True)
     errf = float(jnp.max(jnp.abs(out_f - jit_unfused(z, a, mask, x, kstar, scal))))
     emit("kernel.oga_step.fused_pallas", 0.0, f"max_err={errf:.2e};1 HBM pass")
+    rec("kernel.oga_step.fused_pallas", 0.0, max_err_vs_rows=errf)
 
     # flash attention vs blockwise jnp
     from repro.kernels.flash_attention import flash_attention
@@ -74,9 +118,13 @@ def run(quick: bool = True):
     jit_attn(q, k, v).block_until_ready()
     _, us_a = timed(jit_attn, q, k, v, repeats=10)
     emit("kernel.attn.blockwise_jnp", us_a, f"S={S};GQA {H}/{G}")
+    rec("kernel.attn.blockwise_jnp", us_a, S=S)
     out_fa = flash_attention(q, k, v, interpret=True)
     erra = float(jnp.max(jnp.abs(out_fa - jit_attn(q, k, v))))
     emit("kernel.attn.flash_pallas", 0.0, f"max_err={erra:.2e}")
+    rec("kernel.attn.flash_pallas", 0.0, max_err=erra)
+
+    return records
 
 
 if __name__ == "__main__":

@@ -13,24 +13,40 @@ from repro.sched import trace
 from repro.sched.simulator import improvement_over_baselines, run_all
 
 
-def run_backends(quick: bool = True):
-    """Per-step update timing: reference (three passes) vs the fused kernel's
-    packed-row path. Off-TPU the fused number uses the pure-jnp packed oracle
-    (interpret-mode Pallas would time the interpreter, not the data path)."""
-    from repro.core import graph
+def run_backends(quick: bool = True) -> list[dict]:
+    """Per-step update timing, three variants of the FULL production update
+    (kstar, packing, eta concat, unpack included):
+
+      bisect64  — the PR 3 baseline: reference passes ending in the
+                  64-iteration bisection projection.
+      reference — the same passes with the exact sorted projection (one
+                  sort + two clip/sum passes).
+      fused     — the packed-row fused path (Pallas on TPU, jnp rows with
+                  the sorted projection elsewhere — interpret-mode Pallas
+                  would time the interpreter, not the data path).
+
+    Returns machine-readable records (benchmarks/run.py -> BENCH_kernels
+    artifact); the bisect64/fused ratio is the acceptance speedup.
+    """
+    from repro.core import graph, projection, reward
     from repro.kernels import ops
 
     on_tpu = jax.default_backend() == "tpu"
-    reps = 30 if quick else 200
+    reps = 100 if quick else 200
+    records: list[dict] = []
     for L, R, K in [(10, 128, 6)] if quick else [(10, 128, 6), (20, 512, 6)]:
         spec = trace.build_spec(trace.TraceConfig(L=L, R=R, K=K, seed=0))
         y = graph.random_feasible_decision(spec, jax.random.PRNGKey(0))
         x = jnp.ones((L,))
         eta = jnp.asarray(3.0)
 
-        # Both sides time the FULL production update (kstar, packing, eta
-        # concat, unpack included) — only the kernel dispatch differs.
         operands = ops.pack_spec_operands(spec)
+
+        @jax.jit
+        def bisect64_step(yy):
+            g = reward.reward_grad(spec, x, yy)
+            return projection.project(spec, yy + eta * g, method="bisect")
+
         ref_step = jax.jit(
             lambda yy: ops.oga_update_spec(spec, yy, x, eta, backend="reference")
         )
@@ -41,15 +57,43 @@ def run_backends(quick: bool = True):
             )
         )
 
-        for name, step in [("reference", ref_step), ("fused", fused_step)]:
-            out = jax.block_until_ready(step(y))  # warm
-            t0 = time.time()
-            for _ in range(reps):
-                out = step(y)
-            jax.block_until_ready(out)
-            us = (time.time() - t0) / reps * 1e6
+        # Interleave the variants round-robin: a slow machine phase during
+        # one variant's block would otherwise skew the speedup ratio.
+        variants = [
+            ("bisect64", bisect64_step),
+            ("reference", ref_step),
+            ("fused", fused_step),
+        ]
+        for _, step in variants:
+            jax.block_until_ready(step(y))  # warm
+        rounds, per_round = 10, max(1, reps // 10)
+        elapsed = {name: 0.0 for name, _ in variants}
+        for _ in range(rounds):
+            for name, step in variants:
+                t0 = time.time()
+                for _ in range(per_round):
+                    out = step(y)
+                jax.block_until_ready(out)
+                elapsed[name] += time.time() - t0
+        timings = {}
+        for name, _ in variants:
+            us = elapsed[name] / (rounds * per_round) * 1e6
+            timings[name] = us
             emit(f"oga_step.{name}.L={L}.R={R}.K={K}", us,
                  f"backend={'pallas' if on_tpu else 'jnp'}")
+            records.append({
+                "name": f"oga_step.{name}", "L": L, "R": R, "K": K,
+                "us_per_step": round(us, 2),
+                "backend": "pallas" if on_tpu else "jnp",
+            })
+        speedup = timings["bisect64"] / max(timings["fused"], 1e-9)
+        emit(f"oga_step.speedup_vs_bisect64.L={L}.R={R}.K={K}", 0.0,
+             f"fused_speedup={speedup:.2f}x")
+        records.append({
+            "name": "oga_step.speedup_vs_bisect64", "L": L, "R": R, "K": K,
+            "speedup": round(speedup, 2),
+        })
+    return records
 
 
 def run(quick: bool = True):
@@ -72,7 +116,8 @@ def run(quick: bool = True):
         gaps = improvement_over_baselines(res)
         emit(f"fig3c.contention={cont}", 0.0,
              f"oga={res['ogasched'].avg_reward:.1f};min_gap={min(gaps.values()):+.2f}%")
-    run_backends(quick)
+    # run_backends is NOT called here: the kernels section of benchmarks/run.py
+    # owns it (and writes its records to BENCH_kernels.json).
 
 
 if __name__ == "__main__":

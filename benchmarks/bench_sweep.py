@@ -33,10 +33,10 @@ def _points(G: int) -> list[sweep.SweepPoint]:
     return sweep.make_grid(CFG, seeds=range(G))
 
 
-def _time_resident(points, mode: str) -> tuple[float, dict]:
+def _time_resident(points, mode: str, backend: str = "auto"):
     t0 = time.time()
     batch = sweep.build_batch(points, mode=mode)
-    out = sweep.run_grid(batch, ALGOS, mode=mode)
+    out = sweep.run_grid(batch, ALGOS, mode=mode, backend=backend)
     summ = (
         sweep.summarize_lifecycle(out, batch) if mode == "lifecycle"
         else sweep.summarize(out)
@@ -45,13 +45,15 @@ def _time_resident(points, mode: str) -> tuple[float, dict]:
     return time.time() - t0, summ
 
 
-def _time_streamed(points, mode: str, chunk: int) -> tuple[float, dict]:
+def _time_streamed(points, mode: str, chunk: int, backend: str = "auto"):
     t0 = time.time()
-    summ = sweep.sweep_stream(points, ALGOS, chunk_size=chunk, mode=mode)
+    summ = sweep.sweep_stream(
+        points, ALGOS, chunk_size=chunk, mode=mode, backend=backend
+    )
     return time.time() - t0, summ
 
 
-def _record(name, mode, G, chunk, elapsed, records):
+def _record(name, mode, G, chunk, elapsed, records, backend="fused"):
     mem = sweep.grid_memory_bytes(CFG, G, mode=mode, algorithms=ALGOS)
     peak = sweep.grid_memory_bytes(
         CFG, min(chunk, G) if chunk else G, mode=mode, algorithms=ALGOS
@@ -59,6 +61,7 @@ def _record(name, mode, G, chunk, elapsed, records):
     rec = {
         "name": name,
         "mode": mode,
+        "backend": backend,
         "G": G,
         "chunk_size": chunk,
         "elapsed_s": round(elapsed, 4),
@@ -68,7 +71,7 @@ def _record(name, mode, G, chunk, elapsed, records):
     }
     records.append(rec)
     emit(
-        f"sweep.{name}.{mode}.G={G}.T={CFG.T}.R={CFG.R}",
+        f"sweep.{name}.{mode}.{backend}.G={G}.T={CFG.T}.R={CFG.R}",
         elapsed * 1e6 / G,
         f"configs_per_s={rec['configs_per_s']};"
         f"peak_bytes_est={rec['streamed_peak_bytes_est']}",
@@ -84,15 +87,61 @@ def run(quick: bool = True) -> list[dict]:
     _time_resident(warm, "slot")
     _time_streamed(warm, "slot", CHUNK)
 
-    for G in (64, 256) if quick else (64, 256, 1024):
-        pts = _points(G)
-        _time_resident(pts, "slot")  # warm this G's program shape
-        t_res, s_res = _time_resident(pts, "slot")
-        _record("resident", "slot", G, 0, t_res, records)
-        t_str, s_str = _time_streamed(pts, "slot", CHUNK)
-        _record("streamed", "slot", G, CHUNK, t_str, records)
+    # The default backend is the grid-flattened fused path (N = G*R*K rows,
+    # one kernel call per step per chunk). Acceptance: its configs/s curve
+    # must not degrade as G grows — the PR 3 reference backend fell from ~87
+    # to ~50 configs/s between G=64 and G=256. The grid sizes are measured
+    # in interleaved rounds (like run_backends' variants): separate blocks
+    # would let a slow machine phase land entirely on one G and fake a
+    # scaling trend either way.
+    sizes = (64, 256) if quick else (64, 256, 1024)
+    pts = {G: _points(G) for G in sizes}
+    for G in sizes:
+        _time_resident(pts[G], "slot")  # warm each G's program shape
+    rounds = 3
+    res_el = {G: 0.0 for G in sizes}
+    str_el = {G: 0.0 for G in sizes}
+    summaries = {}
+    for _ in range(rounds):
+        for G in sizes:
+            t, s_res = _time_resident(pts[G], "slot")
+            res_el[G] += t
+            t, s_str = _time_streamed(pts[G], "slot", CHUNK)
+            str_el[G] += t
+            summaries[G] = (s_res, s_str)
+    fused_cps: dict[int, float] = {}
+    for G in sizes:
+        _record("resident", "slot", G, 0, res_el[G] / rounds, records)
+        rec = _record("streamed", "slot", G, CHUNK, str_el[G] / rounds, records)
+        fused_cps[G] = rec["configs_per_s"]
+        s_res, s_str = summaries[G]
         for k in s_res:  # streamed must be a pure reorganisation of work
             np.testing.assert_allclose(s_str[k], s_res[k], err_msg=k)
+
+    # the acceptance signal itself, machine-readable: streamed fused
+    # throughput at the largest grid relative to the smallest (>= ~1.0 means
+    # the PR 3 "degrades with G" cliff is gone)
+    gs = sorted(fused_cps)
+    if len(gs) >= 2:
+        ratio = fused_cps[gs[-1]] / max(fused_cps[gs[0]], 1e-9)
+        emit(f"sweep.fused_scaling.G={gs[0]}->G={gs[-1]}", 0.0,
+             f"configs_per_s_ratio={ratio:.2f}")
+        records.append({
+            "name": "sweep.fused_scaling", "mode": "slot",
+            "backend": "fused", "G_small": gs[0], "G_large": gs[-1],
+            "configs_per_s_ratio": round(ratio, 3),
+        })
+
+    # reference-backend A/B at the smallest grid (the PR 3 default path),
+    # measured with the same equal-work averaging as the fused rows
+    ref_pts = _points(64)
+    _time_resident(ref_pts, "slot", backend="reference")  # warm
+    reps = max(2, 256 // 64)
+    t_ref = sum(
+        _time_resident(ref_pts, "slot", backend="reference")[0]
+        for _ in range(reps)
+    ) / reps
+    _record("resident", "slot", 64, 0, t_ref, records, backend="reference")
 
     # lifecycle: outputs are ~R*K/1 larger per config; stream a modest grid
     G_life = 32 if quick else 256

@@ -2,7 +2,9 @@
 roofline. Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common).
 The sweep section additionally writes machine-readable ``BENCH_sweep.json``
 (configs/sec at several grid sizes, streamed vs resident peak-memory
-estimates) so the sweep-engine perf trajectory is tracked across PRs.
+estimates) and the kernels section ``BENCH_kernels.json`` (projection +
+fused-step timings, incl. the bisect64-vs-fused step A/B) so the perf
+trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.run [--full]
 """
@@ -20,6 +22,11 @@ def main() -> None:
     ap.add_argument(
         "--sweep-json", type=str, default="BENCH_sweep.json",
         help="where the sweep section writes its machine-readable records",
+    )
+    ap.add_argument(
+        "--kernels-json", type=str, default="BENCH_kernels.json",
+        help="where the kernels section writes its machine-readable records "
+        "(projection + fused-step timings, incl. the backend step A/B)",
     )
     args, _ = ap.parse_known_args()
     quick = not args.full
@@ -45,6 +52,13 @@ def main() -> None:
             json.dump(records, f, indent=2)
         print(f"# wrote {len(records)} sweep records to {args.sweep_json}")
 
+    def kernels_section():
+        records = bench_kernels.run(quick)
+        records += bench_scalability.run_backends(quick)
+        with open(args.kernels_json, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"# wrote {len(records)} kernel records to {args.kernels_json}")
+
     sections = [
         ("fig2_reward", lambda: bench_reward.run(T=1000 if quick else 8000)),
         ("tab3_generality", lambda: bench_generality.run(quick)),
@@ -56,7 +70,7 @@ def main() -> None:
         ("thm1_regret", lambda: bench_regret.run(quick)),
         ("sweep_throughput", sweep_section),
         ("lifecycle_jct", lambda: bench_lifecycle.run(quick)),
-        ("kernels", lambda: bench_kernels.run(quick)),
+        ("kernels", kernels_section),
         ("roofline", bench_roofline.run),
     ]
     for name, fn in sections:

@@ -33,8 +33,11 @@ def _sharded_step(spec_local: ClusterSpec, y_local, x, eta, axis: str):
     grad = (g - spec_local.beta[None, None, :] * is_kstar[:, None, :]) * m
     grad = x.astype(y_local.dtype)[:, None, None] * grad
     z = y_local + eta * grad
-    # local projection: per-(r,k) cells live entirely on this shard
-    y_next = projection.project_bisection(
+    # local projection: per-(r,k) cells live entirely on this shard. The
+    # exact sorted sweep is shard_map-safe — it evaluates breakpoints with
+    # max/where reductions only, never the sort primitive that jax 0.4.37's
+    # XLA:CPU miscompiles inside shard_map+fori_loop (see baselines._rank_order).
+    y_next = projection.project_sorted(
         z, spec_local.a, spec_local.c, spec_local.mask
     )
     # local reward contribution (gain separable; penalty needs global s)

@@ -38,7 +38,6 @@ def oga_step(
     state: OGAState,
     x: jax.Array,
     decay: float | jax.Array,
-    proj_iters: int = 64,
     backend: str = "reference",
     operands=None,
 ) -> tuple[OGAState, jax.Array]:
@@ -51,20 +50,18 @@ def oga_step(
     """
     q_t = reward.total_reward(spec, x, state.y)
     y_next = ops.oga_update_spec(
-        spec, state.y, x, state.eta,
-        backend=backend, proj_iters=proj_iters, operands=operands,
+        spec, state.y, x, state.eta, backend=backend, operands=operands,
     )
     new = OGAState(y=y_next, eta=state.eta * decay, t=state.t + 1)
     return new, q_t
 
 
-@partial(jax.jit, static_argnames=("proj_iters", "return_traj", "backend"))
+@partial(jax.jit, static_argnames=("return_traj", "backend"))
 def run(
     spec: ClusterSpec,
     arrivals: jax.Array,
     eta0: float | jax.Array,
     decay: float | jax.Array = 0.9999,
-    proj_iters: int = 64,
     y0: Optional[jax.Array] = None,
     return_traj: bool = False,
     backend: str = "auto",
@@ -87,7 +84,7 @@ def run(
     operands = ops.pack_spec_operands(spec) if backend == "fused" else None
 
     def body(s, x):
-        s2, q_t = oga_step(spec, s, x, decay, proj_iters, backend, operands)
+        s2, q_t = oga_step(spec, s, x, decay, backend, operands)
         out = (q_t, s2.y) if return_traj else (q_t, jnp.zeros((), s2.y.dtype))
         return s2, out
 
@@ -95,6 +92,53 @@ def run(
     if return_traj:
         return rewards, final.y, traj
     return rewards, final.y
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def run_batch(
+    spec: ClusterSpec,
+    arrivals: jax.Array,
+    eta0: jax.Array,
+    decay: jax.Array,
+    use_pallas: bool | None = None,
+):
+    """Run OGASCHED over a stacked grid of G configurations, grid-flattened.
+
+    The fused-backend twin of ``vmap(run)``: instead of vmapping G
+    independent scans, one scan advances all configurations together and
+    each step issues ONE fused row-kernel call over N = G*R*K rows
+    (ops.oga_update_batch) — on TPU a single pallas_call per step for the
+    whole chunk, off-TPU one packed-row jnp update with the exact sorted
+    projection. Static operands are packed once, before the scan.
+
+    Args:
+      spec: stacked ClusterSpec (every leaf leading (G,)).
+      arrivals: (G, T, L); eta0, decay: (G,) (traced, so hyperparameter
+        axes sweep).
+    Returns:
+      rewards: (G, T) per-slot rewards; y_final: (G, L, R, K).
+    """
+    _, L, R = spec.mask.shape
+    K = spec.a.shape[2]
+    G, T, _ = arrivals.shape
+    dtype = spec.a.dtype
+    y0 = jnp.zeros((G, L, R, K), dtype)
+    eta0 = jnp.broadcast_to(jnp.asarray(eta0, dtype), (G,))
+    decay = jnp.broadcast_to(jnp.asarray(decay, dtype), (G,))
+    operands = ops.pack_spec_operands_batch(spec)
+
+    def body(carry, x_t):
+        y, eta = carry
+        q_t = jax.vmap(reward.total_reward)(spec, x_t, y)
+        y_next = ops.oga_update_batch(
+            spec, y, x_t, eta, operands=operands, use_pallas=use_pallas
+        )
+        return (y_next, eta * decay), q_t
+
+    (y_final, _), qs = jax.lax.scan(
+        body, (y0, eta0), jnp.swapaxes(arrivals, 0, 1)
+    )
+    return jnp.swapaxes(qs, 0, 1), y_final
 
 
 def eta_theoretical(spec: ClusterSpec, T: int) -> jax.Array:

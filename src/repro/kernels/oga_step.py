@@ -7,7 +7,13 @@ update is memory-bound (O(1) flops/byte), so fusion is the dominant lever —
 recorded in EXPERIMENTS.md §Perf (scheduler kernel iterations).
 
 Row layout: row n = cell (r, k) with L lanes (ports). Per-row scalars are
-packed as columns of ``scal`` = [alpha, beta_k, c, kind, eta].
+packed as the columns of ``scal`` — ``SCAL_COLUMNS`` below is the single
+definition of that layout (kernels.ops builds it, kernels.ref unpacks it).
+
+The projection uses the seeded-bracket bisection + secant finish shared
+with kernels.proj_bisect (the exact sorted sweep in core.projection needs a
+per-row sort that has no efficient in-kernel lowering; off-TPU the fused
+backend runs the sorted sweep via kernels.ref.oga_step_ref instead).
 """
 from __future__ import annotations
 
@@ -17,7 +23,35 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.proj_bisect import ITERS, NEG, ROW_BLOCK
+from repro.kernels.proj_bisect import ROW_BLOCK, _water_level
+
+# The packed-scalar operand layout, column by column. scal[:, i] holds
+# SCAL_COLUMNS[i]; columns past NUM_SCAL are zero padding up to the TPU lane
+# width of 128 (asserted in oga_step_fused).
+SCAL_COLUMNS = ("alpha", "beta", "c", "kind", "eta")
+NUM_SCAL = len(SCAL_COLUMNS)
+_SCAL_LANES = 128
+
+
+def pack_scal_static(alpha, beta, c, kind) -> jax.Array:
+    """Stack the static per-row scalars (N,) each into the leading
+    (N, NUM_SCAL - 1) columns of the kernel operand — everything in
+    ``SCAL_COLUMNS`` except eta, which decays per step and is appended by
+    ``with_eta``. This pair is the ONLY place the layout is constructed."""
+    return jnp.stack([alpha, beta, c, kind], axis=1)
+
+
+def with_eta(scal_static, eta) -> jax.Array:
+    """Append the eta column to ``pack_scal_static`` output: ``eta`` may be
+    a scalar (one config) or per-row (N,) (grid-flattened chunks)."""
+    n = scal_static.shape[0]
+    eta_col = jnp.broadcast_to(jnp.asarray(eta, scal_static.dtype), (n,))
+    return jnp.concatenate([scal_static, eta_col[:, None]], axis=1)
+
+
+def pack_scal(alpha, beta, c, kind, eta) -> jax.Array:
+    """The full (N, NUM_SCAL) kernel operand in ``SCAL_COLUMNS`` order."""
+    return with_eta(pack_scal_static(alpha, beta, c, kind), eta)
 
 
 def _util_grad(kind, alpha, y):
@@ -38,7 +72,7 @@ def _kernel(y_ref, a_ref, mask_ref, x_ref, kstar_ref, scal_ref, out_ref):
     m = mask_ref[...].astype(jnp.float32)
     x = x_ref[...].astype(jnp.float32)          # (Rb, L) arrivals (bcast rows)
     kst = kstar_ref[...].astype(jnp.float32)    # (Rb, L) 1{k = k*_l}
-    scal = scal_ref[...].astype(jnp.float32)    # (Rb, 128): packed scalars
+    scal = scal_ref[...].astype(jnp.float32)    # (Rb, 128): SCAL_COLUMNS
     alpha = scal[:, 0:1]
     beta = scal[:, 1:2]
     c = scal[:, 2:3]
@@ -49,44 +83,41 @@ def _kernel(y_ref, a_ref, mask_ref, x_ref, kstar_ref, scal_ref, out_ref):
     g = _util_grad(kind, alpha, y * m) - beta * kst
     z = y + eta * x * g * m
 
-    # fast projection (bisection water level)
+    # fast projection: seeded-bracket bisection + secant (proj_bisect)
+    tau, need = _water_level(z, a, m, c)
     box = jnp.clip(z, 0.0, a) * m
-    need = jnp.sum(box, axis=1, keepdims=True) > c
-    hi = jnp.maximum(jnp.max(jnp.where(m > 0, z, NEG), axis=1, keepdims=True), 0.0)
-    lo = jnp.zeros_like(hi)
-
-    def body(_, carry):
-        lo, hi = carry
-        mid = 0.5 * (lo + hi)
-        gsum = jnp.sum(jnp.clip(z - mid, 0.0, a) * m, axis=1, keepdims=True)
-        too_big = gsum > c
-        return jnp.where(too_big, mid, lo), jnp.where(too_big, hi, mid)
-
-    lo, hi = jax.lax.fori_loop(0, ITERS, body, (lo, hi))
-    tau = 0.5 * (lo + hi)
     proj = jnp.clip(z - tau, 0.0, a) * m
     out_ref[...] = jnp.where(need, proj, box).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def oga_step_fused(y, a, mask, x, kstar, scal, *, interpret: bool = False):
-    """Fused OGA slot update over (N=R*K, L) rows.
+    """Fused OGA slot update over (N, L) rows — N is R*K for one config, or
+    G*R*K when a sweep chunk's grid axis is flattened in (kernels.ops.
+    oga_update_batch issues exactly one such call per step for a whole
+    chunk).
 
-    y, a, mask, x, kstar: (N, L). scal: (N, 5) = [alpha, beta, c, kind, eta].
+    y, a, mask, x, kstar: (N, L). scal: (N, NUM_SCAL) per ``SCAL_COLUMNS``.
     Returns y(t+1) (N, L).
     """
+    if scal.shape[1] > _SCAL_LANES:
+        raise ValueError(
+            f"scal has {scal.shape[1]} columns; the kernel packs them into "
+            f"one {_SCAL_LANES}-lane block (layout {SCAL_COLUMNS})"
+        )
     N, L = y.shape
     pad_n = (-N) % ROW_BLOCK
     pad_l = (-L) % 128
     pad2 = lambda t: jnp.pad(t, ((0, pad_n), (0, pad_l)))
     yp, ap, mp, xp, kp = map(pad2, (y, a, mask, x, kstar))
-    sp = jnp.pad(scal, ((0, pad_n), (0, 128 - scal.shape[1])))
+    sp = jnp.pad(scal, ((0, pad_n), (0, _SCAL_LANES - scal.shape[1])))
     Np, Lp = yp.shape
     row_spec = pl.BlockSpec((ROW_BLOCK, Lp), lambda i: (i, 0))
     out = pl.pallas_call(
         _kernel,
         grid=(Np // ROW_BLOCK,),
-        in_specs=[row_spec] * 5 + [pl.BlockSpec((ROW_BLOCK, 128), lambda i: (i, 0))],
+        in_specs=[row_spec] * 5
+        + [pl.BlockSpec((ROW_BLOCK, _SCAL_LANES), lambda i: (i, 0))],
         out_specs=row_spec,
         out_shape=jax.ShapeDtypeStruct((Np, Lp), y.dtype),
         interpret=interpret,

@@ -1,10 +1,14 @@
-"""Jit'd dispatch wrappers: Pallas on TPU, interpret-mode elsewhere, with the
-pure-jnp oracle available for A/B (config flag ``use_pallas_kernels``).
+"""Jit'd dispatch wrappers: Pallas on TPU, pure-jnp packed rows elsewhere,
+with the bisection oracle available for A/B (config flag
+``use_pallas_kernels``).
 
-Also home of the spec-level OGA backend switch (``oga_update_spec``) and the
-(L, R, K) <-> (N = R*K, L) row-layout converters the fused kernel needs: row
-n = cell (r, k), lanes = ports. Packing is a transpose + reshape, so the
-round-trip is exact.
+Also home of the spec-level OGA backend switch (``oga_update_spec``), its
+grid-flattened batch variant (``oga_update_batch`` — one kernel call per
+step for a whole sweep chunk, rows N = G*R*K), and the (L, R, K) <->
+(N = R*K, L) row-layout converters the fused kernel needs: row n = cell
+(r, k), lanes = ports. Packing is a transpose + reshape, so the round-trip
+is exact. The packed-scalar column layout is defined once, in
+``kernels.oga_step.SCAL_COLUMNS``.
 """
 from __future__ import annotations
 
@@ -26,12 +30,13 @@ def _on_tpu() -> bool:
 
 
 def resolve_oga_backend(backend: str = "auto") -> str:
-    """"auto" -> fused kernel on TPU, unfused reference elsewhere (interpret
-    mode makes the fused kernel correct on CPU but not fast)."""
+    """"auto" -> "fused" everywhere: real Pallas on TPU, the packed-row jnp
+    path with the exact sorted projection elsewhere (kernels.ref.oga_step_ref
+    — same data layout, no Pallas interpreter, vmappable)."""
     if backend not in OGA_BACKENDS:
         raise ValueError(f"backend must be one of {OGA_BACKENDS}, got {backend!r}")
     if backend == "auto":
-        return "fused" if _on_tpu() else "reference"
+        return "fused"
     return backend
 
 
@@ -51,22 +56,53 @@ def pack_spec_operands(spec):
     """Static fused-kernel operands for a ClusterSpec.
 
     Returns (a_rows, mask_rows, scal_static): per-row channel caps and
-    adjacency (N, L), plus the [alpha, beta, c, kind] columns of the kernel's
-    packed-scalar operand (N, 4) — eta is appended per step since it decays.
+    adjacency (N, L), plus the leading static columns of the kernel's
+    packed-scalar operand (N, NUM_SCAL - 1) in ``oga_step.SCAL_COLUMNS``
+    order — eta is appended per step since it decays. Build once per
+    trajectory (ogasched.run / lifecycle.run hoist it out of their scan
+    bodies) and thread through ``operands=``.
     """
     L, R, K = spec.L, spec.R, spec.K
     a_rows = jnp.broadcast_to(spec.a.T[None], (R, K, L)).reshape(R * K, L)
     mask_rows = jnp.broadcast_to(spec.mask.T[:, None], (R, K, L)).reshape(R * K, L)
-    scal_static = jnp.stack(
-        [
-            spec.alpha.reshape(-1),
-            jnp.broadcast_to(spec.beta[None], (R, K)).reshape(-1),
-            spec.c.reshape(-1),
-            jnp.broadcast_to(spec.kinds[None], (R, K)).reshape(-1).astype(spec.a.dtype),
-        ],
-        axis=1,
+    scal_static = _og.pack_scal_static(
+        spec.alpha.reshape(-1),
+        jnp.broadcast_to(spec.beta[None], (R, K)).reshape(-1),
+        spec.c.reshape(-1),
+        jnp.broadcast_to(spec.kinds[None], (R, K)).reshape(-1).astype(spec.a.dtype),
     )
     return a_rows, mask_rows, scal_static
+
+
+def pack_spec_operands_batch(spec):
+    """``pack_spec_operands`` for a stacked spec (every leaf leading (G,)),
+    with the grid axis flattened into the row axis: (G*R*K, L) / (G*N, 4)."""
+    a_rows, mask_rows, scal_static = jax.vmap(pack_spec_operands)(spec)
+    flat = lambda t: t.reshape((-1,) + t.shape[2:])
+    return flat(a_rows), flat(mask_rows), flat(scal_static)
+
+
+def _kstar_rows(spec, y):
+    """1{k = k*_l} rows for one config: k*_l = argmax_k beta_k sum_r y (eq.
+    27), same first-index tie rule as reward_grad, broadcast to (R*K, L)."""
+    L, R, K = spec.L, spec.R, spec.K
+    s = jnp.sum(y * spec.mask[:, :, None], axis=1)  # (L, K)
+    kstar = jax.nn.one_hot(jnp.argmax(spec.beta[None] * s, axis=1), K, dtype=y.dtype)
+    return jnp.broadcast_to(kstar.T[None], (R, K, L)).reshape(R * K, L)
+
+
+def _dispatch_fused(y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal,
+                    use_pallas):
+    """Pallas on TPU, packed-row jnp (exact sorted projection) elsewhere.
+    ``use_pallas`` forces: True -> Pallas (interpret mode off-TPU, slow —
+    kernel correctness checks only), False -> jnp rows."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _og.oga_step_fused(
+            y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal,
+            interpret=not _on_tpu(),
+        )
+    return _ref.oga_step_ref(y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal)
 
 
 def oga_update_spec(
@@ -76,52 +112,89 @@ def oga_update_spec(
     eta: jax.Array,
     *,
     backend: str = "auto",
-    proj_iters: int = 64,
     operands=None,
     use_pallas: bool | None = None,
 ) -> jax.Array:
     """One OGA slot update y -> y(t+1) at the (L, R, K) spec level.
 
     backend:
-      "reference" — grad (eq. 30), ascent, bisection projection as three
-                    separate (L, R, K) passes (three HBM round-trips).
-      "fused"     — the single-pass Pallas kernel over packed (R*K, L) rows;
-                    real Pallas on TPU, interpret mode elsewhere. proj_iters
-                    is fixed at the kernel's compiled iteration count.
-      "auto"      — fused on TPU, reference elsewhere.
+      "reference" — grad (eq. 30), ascent, spec-level exact projection as
+                    separate (L, R, K) passes. Both backends project
+                    exactly now; the historical bisection A/B lives at the
+                    projection level (``projection.project(method="bisect",
+                    iters=...)``).
+      "fused"     — the single-pass packed-row path over (R*K, L) rows:
+                    real Pallas on TPU, the jnp rows implementation with the
+                    exact sorted projection elsewhere.
+      "auto"      — "fused".
 
     ``operands`` optionally carries ``pack_spec_operands(spec)`` so a scan
-    body does not rebuild the static rows every step. ``use_pallas=False``
-    swaps the fused kernel for its packed-row jnp oracle (same data path,
-    no Pallas interpreter) — benchmarking off-TPU; default keeps Pallas.
+    body does not rebuild the static rows every step. ``use_pallas`` forces
+    the fused dispatch (True: Pallas even off-TPU in interpret mode; False:
+    jnp rows even on TPU); default picks by platform.
     """
     backend = resolve_oga_backend(backend)
     if backend == "reference":
         g = _reward.reward_grad(spec, x, y)
-        return _projection.project(spec, y + eta * g, iters=proj_iters)
+        return _projection.project(spec, y + eta * g)
 
     L, R, K = spec.L, spec.R, spec.K
     a_rows, mask_rows, scal_static = (
         pack_spec_operands(spec) if operands is None else operands
     )
     y_rows = pack_rows(y)
-    # k*_l = argmax_k beta_k sum_r y_(l,r)^k (eq. 27) — same first-index tie
-    # rule as reward_grad, computed once at the spec level then broadcast.
-    s = jnp.sum(y * spec.mask[:, :, None], axis=1)  # (L, K)
-    kstar = jax.nn.one_hot(jnp.argmax(spec.beta[None] * s, axis=1), K, dtype=y.dtype)
-    kstar_rows = jnp.broadcast_to(kstar.T[None], (R, K, L)).reshape(R * K, L)
+    kstar_rows = _kstar_rows(spec, y)
     x_rows = jnp.broadcast_to(x.astype(y.dtype)[None], (R * K, L))
-    scal = jnp.concatenate(
-        [scal_static, jnp.full((R * K, 1), eta, scal_static.dtype)], axis=1
+    scal = _og.with_eta(scal_static, eta)
+    rows = _dispatch_fused(
+        y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal, use_pallas
     )
-    if use_pallas is None or use_pallas:
-        rows = _og.oga_step_fused(
-            y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal,
-            interpret=not _on_tpu(),
-        )
-    else:
-        rows = _ref.oga_step_ref(y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal)
     return unpack_rows(rows, L, R, K)
+
+
+def oga_update_batch(
+    spec,
+    y: jax.Array,
+    x: jax.Array,
+    eta: jax.Array,
+    *,
+    operands=None,
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """One fused OGA slot update for a whole stacked grid of G configs.
+
+    The grid axis is flattened into the kernel's row axis — N = G*R*K rows,
+    ONE kernel dispatch per step for the entire chunk — instead of vmapping
+    G per-config updates (which off-TPU used to force the reference backend,
+    the PR 1 deviation, and on TPU launched a batched-grid kernel per
+    config block).
+
+    Args:
+      spec: stacked ClusterSpec, every leaf leading (G,).
+      y: (G, L, R, K) decisions; x: (G, L) arrivals; eta: (G,) step sizes.
+      operands: optional ``pack_spec_operands_batch(spec)``.
+    Returns y(t+1) (G, L, R, K).
+    """
+    G, L, R, K = y.shape
+    N = R * K
+    a_rows, mask_rows, scal_static = (
+        pack_spec_operands_batch(spec) if operands is None else operands
+    )
+    y_rows = jax.vmap(pack_rows)(y).reshape(G * N, L)
+    kstar_rows = jax.vmap(_kstar_rows)(spec, y).reshape(G * N, L)
+    x_rows = jnp.broadcast_to(
+        x.astype(y.dtype)[:, None, :], (G, N, L)
+    ).reshape(G * N, L)
+    eta_rows = jnp.broadcast_to(
+        eta.astype(scal_static.dtype)[:, None], (G, N)
+    ).reshape(G * N)
+    scal = _og.with_eta(scal_static, eta_rows)
+    rows = _dispatch_fused(
+        y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal, use_pallas
+    )
+    return jax.vmap(unpack_rows, in_axes=(0, None, None, None))(
+        rows.reshape(G, N, L), L, R, K
+    )
 
 
 # ------------------------------------------------------- kernel dispatchers --

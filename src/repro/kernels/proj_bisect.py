@@ -3,8 +3,23 @@
 One grid row-block projects a tile of (r, k) cells; each cell's row holds its
 L_r channel entries. The paper's sort + data-dependent repeat loop is
 replaced by branch-free bisection on the water level tau (DESIGN.md §3):
-fixed 64 iterations of pure VPU arithmetic per lane — no sorting network, no
-data-dependent trip counts, identical control flow for every cell.
+pure VPU arithmetic per lane — no sorting network, no data-dependent trip
+counts, identical control flow for every cell. This is the TPU fallback for
+the exact sorted breakpoint sweep (core.projection.project_rows_sorted),
+whose per-row 2L-element sort has no efficient in-kernel lowering.
+
+The bracket is seeded rather than started at [0, max z]: g is 1-Lipschitz
+per active lane, so tau* >= (sum(box) - c) / n_active, and ITERS drops from
+64 to 20. A final secant step closes most of the remaining gap: g is
+piecewise linear, so the chord from (lo, g(lo)) to (hi, g(hi)) crosses c
+exactly at tau* once the bracket is breakpoint-free (the common case after
+20 halvings). When a kink remains inside the bracket the chord can land on
+either side of tau* — g is NOT convex (each clip term has slope 0 -> -1 ->
+0, a concave kink at z_l - a_l) — so the hard accuracy/feasibility
+guarantee is the bracket width itself: |tau - tau*| <= (hi0 - lo0) / 2^20,
+i.e. capacity overshoot at most n_active * that (f32-rounding magnitude at
+the scales this scheduler runs; pinned vs the exact oracle in
+tests/test_kernels.py).
 """
 from __future__ import annotations
 
@@ -15,8 +30,38 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 ROW_BLOCK = 8
-ITERS = 64
+ITERS = 20
 NEG = -1e30
+
+
+def _water_level(z, a, m, c):
+    """Shared bisection body: seeded bracket, ITERS halvings, secant finish.
+
+    z, a, m: (Rb, L) f32; c: (Rb, 1) f32. Returns (tau, need) with tau the
+    water level on `need` rows (capacity binding) and 0 elsewhere.
+    """
+    box = jnp.clip(z, 0.0, a) * m
+    s_box = jnp.sum(box, axis=1, keepdims=True)
+    need = s_box > c
+
+    n_act = jnp.maximum(jnp.sum(m, axis=1, keepdims=True), 1.0)
+    lo = jnp.maximum((s_box - c) / n_act, 0.0)  # g(lo) >= c (1-Lipschitz/lane)
+    hi = jnp.maximum(jnp.max(jnp.where(m > 0, z, NEG), axis=1, keepdims=True), lo)
+
+    def g(tau):
+        return jnp.sum(jnp.clip(z - tau, 0.0, a) * m, axis=1, keepdims=True)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        too_big = g(mid) > c
+        return jnp.where(too_big, mid, lo), jnp.where(too_big, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, ITERS, body, (lo, hi))
+    glo, ghi = g(lo), g(hi)
+    tau = lo + (glo - c) * (hi - lo) / jnp.maximum(glo - ghi, 1e-30)
+    tau = jnp.clip(tau, lo, hi)
+    return jnp.where(need, tau, 0.0), need
 
 
 def _kernel(z_ref, a_ref, mask_ref, c_ref, out_ref):
@@ -25,22 +70,8 @@ def _kernel(z_ref, a_ref, mask_ref, c_ref, out_ref):
     m = mask_ref[...].astype(jnp.float32)
     c = c_ref[...].astype(jnp.float32)[:, :1]   # (Rb, 1)
 
+    tau, need = _water_level(z, a, m, c)
     box = jnp.clip(z, 0.0, a) * m
-    need = jnp.sum(box, axis=1, keepdims=True) > c
-
-    hi = jnp.max(jnp.where(m > 0, z, NEG), axis=1, keepdims=True)
-    hi = jnp.maximum(hi, 0.0)
-    lo = jnp.zeros_like(hi)
-
-    def body(_, carry):
-        lo, hi = carry
-        mid = 0.5 * (lo + hi)
-        g = jnp.sum(jnp.clip(z - mid, 0.0, a) * m, axis=1, keepdims=True)
-        too_big = g > c
-        return jnp.where(too_big, mid, lo), jnp.where(too_big, hi, mid)
-
-    lo, hi = jax.lax.fori_loop(0, ITERS, body, (lo, hi))
-    tau = 0.5 * (lo + hi)
     proj = jnp.clip(z - tau, 0.0, a) * m
     out_ref[...] = jnp.where(need, proj, box).astype(out_ref.dtype)
 

@@ -8,6 +8,11 @@ from repro.core import projection as _proj
 from repro.models import attention as _attn
 
 
+def proj_rows_sorted(z, a, mask, c):
+    """Exact one-sort breakpoint-sweep row projection (core.projection)."""
+    return _proj.project_rows_sorted(z, a, mask, c)
+
+
 def proj_rows_ref(z, a, mask, c, iters: int = 64):
     """Direct jnp bisection over rows — independent re-implementation."""
     m = mask
@@ -44,14 +49,26 @@ def proj_rows_exact_np(z, a, mask, c):
     return out
 
 
-def oga_step_ref(y, a, mask, x, kstar, scal):
-    """Unfused oracle: grad (eq. 30) -> ascent -> projection."""
-    from repro.core import utilities as U
+def oga_step_ref(y, a, mask, x, kstar, scal, proj: str = "sorted"):
+    """Packed-row OGA update: grad (eq. 30) -> ascent -> projection.
 
-    alpha, beta, c, kind, eta = (scal[:, i] for i in range(5))
+    Doubles as the Pallas oracle AND the off-TPU production path of the
+    "fused" backend (kernels.ops dispatches here when no TPU is present):
+    same packed-row data layout as the kernel, exact sorted projection
+    instead of the in-kernel bisection. ``proj="bisect"`` keeps the
+    64-iteration bisection for A/B benchmarking.
+
+    ``scal`` columns follow kernels.oga_step.SCAL_COLUMNS.
+    """
+    from repro.core import utilities as U
+    from repro.kernels.oga_step import NUM_SCAL
+
+    alpha, beta, c, kind, eta = (scal[:, i] for i in range(NUM_SCAL))
     g = U.util_grad(kind[:, None].astype(jnp.int32), alpha[:, None], y * mask)
     g = g - beta[:, None] * kstar
     z = y + eta[:, None] * x * g * mask
+    if proj == "sorted":
+        return proj_rows_sorted(z, a, mask, c)
     return proj_rows_ref(z, a, mask, c)
 
 

@@ -147,7 +147,6 @@ def _step(
     algorithm: str,
     decay,
     rate_floor,
-    proj_iters: int,
     backend: str,
     step_w,
     operands,
@@ -189,9 +188,10 @@ def _step(
         y_prop = baselines.step_fn(algorithm)(
             graph.residual_spec(spec, state.held), admit_f, step_w
         )
-    alloc = projection.project_bisection(
-        y_prop * admit_f[:, None, None], spec.a, c_res, spec.mask,
-        iters=proj_iters,
+    # exact one-sort projection (core.projection): the per-slot allocation
+    # used to be a second 64-pass bisection inside the scan body.
+    alloc = projection.project_sorted(
+        y_prop * admit_f[:, None, None], spec.a, c_res, spec.mask
     )
     reward_t = reward.total_reward(spec, admit_f, alloc)
 
@@ -218,8 +218,7 @@ def _step(
     # residual capacity). Queue/occupancy state never leaks into learning.
     if algorithm == "ogasched":
         y_next = ops.oga_update_spec(
-            spec, state.y, x_t, state.eta,
-            backend=backend, proj_iters=proj_iters, operands=operands,
+            spec, state.y, x_t, state.eta, backend=backend, operands=operands,
         )
     else:
         y_next = state.y
@@ -238,7 +237,7 @@ def _step(
 
 @partial(
     jax.jit,
-    static_argnames=("algorithm", "queue_depth", "proj_iters", "backend"),
+    static_argnames=("algorithm", "queue_depth", "backend"),
 )
 def run(
     spec: ClusterSpec,
@@ -250,7 +249,6 @@ def run(
     decay: float | jax.Array = 0.9999,
     queue_depth: int = 8,
     rate_floor: float | jax.Array = 1e-3,
-    proj_iters: int = 64,
     backend: str = "auto",
     y0: Optional[jax.Array] = None,
 ) -> LifecycleTrace:
@@ -284,7 +282,7 @@ def run(
         x_t, w_t = xw
         return _step(
             spec, s, x_t, w_t, algorithm=algorithm, decay=decay,
-            rate_floor=rate_floor, proj_iters=proj_iters, backend=backend,
+            rate_floor=rate_floor, backend=backend,
             step_w=step_w, operands=operands,
         )
 

@@ -35,7 +35,6 @@ def run_all(
     with_regret: bool = False,
     oracle_iters: int = 2000,
     backend: str = "auto",
-    proj_iters: int = 64,
     mode: str = "slot",
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
@@ -67,9 +66,8 @@ def run_all(
         if mode == "lifecycle":
             tr = lifecycle.run(
                 spec, arrivals, works, name,
-                eta0=eta0, decay=decay, proj_iters=proj_iters,
-                backend=backend, queue_depth=queue_depth,
-                rate_floor=rate_floor,
+                eta0=eta0, decay=decay, backend=backend,
+                queue_depth=queue_depth, rate_floor=rate_floor,
             )
             tr = jax.block_until_ready(tr)
             rewards = np.asarray(tr.rewards)
@@ -82,8 +80,7 @@ def run_all(
             metrics = {k: float(v[0]) for k, v in batched.items()}
         else:
             rewards = sweep.run_algorithm(
-                spec, arrivals, name,
-                eta0=eta0, decay=decay, proj_iters=proj_iters, backend=backend,
+                spec, arrivals, name, eta0=eta0, decay=decay, backend=backend,
             )
             rewards = np.asarray(jax.block_until_ready(rewards))
         res = SimResult(

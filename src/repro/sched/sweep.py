@@ -13,7 +13,12 @@ Layers:
                             (trace.make_batch; works only in lifecycle mode).
   * ``run_algorithm``     — single-config rewards; the one code path shared by
                             ``simulator.run_all`` and the vectorised grid.
-  * ``run_grid``          — jit(vmap(run_algorithm)) over the stacked batch.
+  * ``run_grid``          — one jitted dispatch per algorithm over the stacked
+                            batch. OGASCHED's fused backend (the default) is
+                            grid-flattened: the G axis folds into the fused
+                            kernel's row axis (ogasched.run_batch, N = G*R*K
+                            rows, one kernel call per step for the grid);
+                            heuristics and the reference backend vmap.
   * ``run_grid_sharded``  — the same grid with the G axis laid over a device
                             mesh via shard_map (vmap fallback on one device).
   * ``run_grid_stream`` / ``sweep_stream``
@@ -48,6 +53,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro import compat
 from repro.core import baselines, ogasched
 from repro.core.graph import ClusterSpec
+from repro.kernels import ops
 from repro.sched import lifecycle, trace
 
 ALGORITHMS = ("ogasched",) + baselines.BASELINES
@@ -153,7 +159,6 @@ def run_algorithm(
     *,
     eta0: float | jax.Array = 25.0,
     decay: float | jax.Array = 0.9999,
-    proj_iters: int = 64,
     backend: str = "auto",
 ) -> jax.Array:
     """(T,) per-slot rewards of one algorithm on one configuration.
@@ -163,8 +168,7 @@ def run_algorithm(
     """
     if name == "ogasched":
         rewards, _ = ogasched.run(
-            spec, arrivals, eta0=eta0, decay=decay,
-            proj_iters=proj_iters, backend=backend,
+            spec, arrivals, eta0=eta0, decay=decay, backend=backend,
         )
         return rewards
     return baselines.run(spec, arrivals, name)
@@ -175,12 +179,16 @@ def run_algorithm(
 # the per-shard computation is the exact computation the one-device grid runs.
 # --------------------------------------------------------------------------
 
-def _vmap_slot(spec, arrivals, eta0, decay, *, name, proj_iters, backend):
+def _vmap_slot(spec, arrivals, eta0, decay, *, name, backend):
     if name == "ogasched":
+        if ops.resolve_oga_backend(backend) == "fused":
+            # grid-flattened: one fused row-kernel call per step covers the
+            # whole chunk (N = G*R*K rows) instead of G vmapped scans.
+            rewards, _ = ogasched.run_batch(spec, arrivals, eta0, decay)
+            return rewards
         return jax.vmap(
             lambda s, a, e, d: run_algorithm(
-                s, a, name, eta0=e, decay=d,
-                proj_iters=proj_iters, backend=backend,
+                s, a, name, eta0=e, decay=d, backend=backend,
             )
         )(spec, arrivals, eta0, decay)
     return jax.vmap(lambda s, a: baselines.run(s, a, name))(spec, arrivals)
@@ -188,37 +196,48 @@ def _vmap_slot(spec, arrivals, eta0, decay, *, name, proj_iters, backend):
 
 def _vmap_lifecycle(
     spec, arrivals, works, eta0, decay, rate_floor,
-    *, name, proj_iters, backend, queue_depth,
+    *, name, backend, queue_depth,
 ):
     return jax.vmap(
         lambda s, a, w, e, d: lifecycle.run(
-            s, a, w, name, eta0=e, decay=d, proj_iters=proj_iters,
+            s, a, w, name, eta0=e, decay=d,
             backend=backend, queue_depth=queue_depth, rate_floor=rate_floor,
         )
     )(spec, arrivals, works, eta0, decay)
 
 
-@partial(jax.jit, static_argnames=("proj_iters", "backend"))
-def _run_grid_ogasched(spec, arrivals, eta0, decay, proj_iters, backend):
-    return _vmap_slot(
-        spec, arrivals, eta0, decay,
-        name="ogasched", proj_iters=proj_iters, backend=backend,
-    )
+def _grid_ogasched(spec, arrivals, eta0, decay, backend):
+    return _vmap_slot(spec, arrivals, eta0, decay, name="ogasched", backend=backend)
 
 
-@partial(
-    jax.jit,
-    static_argnames=("name", "proj_iters", "backend", "queue_depth"),
-)
-def _run_grid_lifecycle(
+def _grid_lifecycle(
     spec, arrivals, works, eta0, decay, rate_floor,
-    name, proj_iters, backend, queue_depth,
+    name, backend, queue_depth,
 ):
     return _vmap_lifecycle(
         spec, arrivals, works, eta0, decay, rate_floor,
-        name=name, proj_iters=proj_iters, backend=backend,
-        queue_depth=queue_depth,
+        name=name, backend=backend, queue_depth=queue_depth,
     )
+
+
+_run_grid_ogasched = partial(jax.jit, static_argnames=("backend",))(
+    _grid_ogasched
+)
+_LIFECYCLE_STATICS = ("name", "backend", "queue_depth")
+_run_grid_lifecycle = partial(jax.jit, static_argnames=_LIFECYCLE_STATICS)(
+    _grid_lifecycle
+)
+# Donated twins for the chunked streaming driver: the chunk's arrival/work
+# buffers are handed to XLA for reuse as output storage, capping a streamed
+# grid's peak memory at (outputs + inputs - donated) per chunk. Only the
+# LAST algorithm of a chunk may donate (earlier dispatches share the
+# buffers), and donation is skipped on CPU where XLA cannot use it.
+_run_grid_ogasched_donated = partial(
+    jax.jit, static_argnames=("backend",), donate_argnums=(1,)
+)(_grid_ogasched)
+_run_grid_lifecycle_donated = partial(
+    jax.jit, static_argnames=_LIFECYCLE_STATICS, donate_argnums=(1, 2)
+)(_grid_lifecycle)
 
 
 def _algorithm_backend(name: str, backend: str) -> str:
@@ -226,15 +245,24 @@ def _algorithm_backend(name: str, backend: str) -> str:
     return backend if name == "ogasched" else "reference"
 
 
+def _donation_applies(algorithms: Sequence[str], mode: str) -> bool:
+    """Whether ``run_grid(donate=True)`` can actually donate: every
+    lifecycle dispatch has a donated twin, but in slot mode only the
+    OGASCHED dispatch does (baselines.run_batch takes no donation)."""
+    if mode == "lifecycle":
+        return len(algorithms) > 0
+    return "ogasched" in algorithms
+
+
 def run_grid(
     batch: SweepBatch,
     algorithms: Sequence[str] = ALGORITHMS,
     *,
-    backend: str = "reference",
-    proj_iters: int = 64,
+    backend: str = "auto",
     mode: str = "slot",
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
+    donate: bool = False,
 ) -> dict[str, jax.Array] | dict[str, lifecycle.LifecycleTrace]:
     """Run every algorithm over every configuration.
 
@@ -244,9 +272,20 @@ def run_grid(
     LifecycleTrace} with every leaf leading (G, T, ...) — reduce with
     ``summarize_lifecycle``.
 
-    ``backend`` applies to OGASCHED only; the default stays on the reference
-    update because the grid vmaps whole scans and interpret-mode Pallas under
-    vmap is needlessly slow off-TPU ("fused" composes on TPU).
+    ``backend`` applies to OGASCHED only and defaults to "auto" == "fused"
+    everywhere: in slot mode the grid axis is flattened into the fused
+    kernel's row axis (ogasched.run_batch — one kernel call per step for
+    the whole grid), off-TPU the packed rows run through the pure-jnp path
+    with the exact sorted projection. "reference" keeps the vmapped
+    three-pass update for A/B.
+
+    ``donate=True`` hands ``batch.arrivals`` (and ``works``) to XLA on the
+    final donation-capable dispatch so their buffers can back the outputs —
+    the streaming driver uses it per chunk. In slot mode only the OGASCHED
+    dispatch can donate, so it is reordered to run last; the returned dict
+    always follows ``algorithms`` order. The donated leaves are dead
+    afterwards; callers must not reuse the batch. No-op on CPU or when no
+    dispatch can donate.
     """
     _check_mode(mode)
     if mode == "lifecycle" and batch.works is None:
@@ -254,23 +293,34 @@ def run_grid(
             "lifecycle grid needs job sizes: build_batch(points, "
             "mode='lifecycle')"
         )
+    donate = (
+        donate and jax.default_backend() != "cpu"
+        and _donation_applies(algorithms, mode)
+    )
+    order = list(algorithms)
+    if donate and mode != "lifecycle":
+        # only the OGASCHED dispatch has a donated twin in slot mode: run it
+        # last, once no other algorithm needs the arrival buffer (stable
+        # sort — baseline order is preserved)
+        order.sort(key=lambda n: n == "ogasched")
     out: dict = {}
-    for name in algorithms:
+    for i, name in enumerate(order):
+        last = donate and i == len(order) - 1
         if mode == "lifecycle":
-            out[name] = _run_grid_lifecycle(
+            fn = _run_grid_lifecycle_donated if last else _run_grid_lifecycle
+            out[name] = fn(
                 batch.spec, batch.arrivals, batch.works, batch.eta0,
                 batch.decay, jnp.asarray(rate_floor, jnp.float32),
-                name, proj_iters, _algorithm_backend(name, backend),
-                queue_depth,
+                name, _algorithm_backend(name, backend), queue_depth,
             )
         elif name == "ogasched":
-            out[name] = _run_grid_ogasched(
-                batch.spec, batch.arrivals, batch.eta0, batch.decay,
-                proj_iters, backend,
+            fn = _run_grid_ogasched_donated if last else _run_grid_ogasched
+            out[name] = fn(
+                batch.spec, batch.arrivals, batch.eta0, batch.decay, backend,
             )
         else:
             out[name] = baselines.run_batch(batch.spec, batch.arrivals, name)
-    return out
+    return {name: out[name] for name in algorithms}
 
 
 # --------------------------------------------------------------------------
@@ -281,23 +331,20 @@ def run_grid(
 
 @lru_cache(maxsize=None)
 def _sharded_grid_fn(
-    mesh: Mesh, name: str, mode: str, proj_iters: int, backend: str,
-    queue_depth: int,
+    mesh: Mesh, name: str, mode: str, backend: str, queue_depth: int,
 ):
     gspec = P(mesh.axis_names[0])
     if mode == "lifecycle":
         def body(spec, arrivals, works, eta0, decay, rate_floor):
             return _vmap_lifecycle(
                 spec, arrivals, works, eta0, decay, rate_floor,
-                name=name, proj_iters=proj_iters, backend=backend,
-                queue_depth=queue_depth,
+                name=name, backend=backend, queue_depth=queue_depth,
             )
         in_specs = (gspec, gspec, gspec, gspec, gspec, P())
     else:
         def body(spec, arrivals, eta0, decay):
             return _vmap_slot(
-                spec, arrivals, eta0, decay,
-                name=name, proj_iters=proj_iters, backend=backend,
+                spec, arrivals, eta0, decay, name=name, backend=backend,
             )
         in_specs = (gspec, gspec, gspec, gspec)
     return jax.jit(compat.shard_map(
@@ -319,8 +366,7 @@ def run_grid_sharded(
     algorithms: Sequence[str] = ALGORITHMS,
     *,
     mesh: Optional[Mesh] = None,
-    backend: str = "reference",
-    proj_iters: int = 64,
+    backend: str = "auto",
     mode: str = "slot",
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
@@ -338,8 +384,8 @@ def run_grid_sharded(
         mesh = compat.grid_mesh()
     if mesh is None or mesh.size <= 1:
         return run_grid(
-            batch, algorithms, backend=backend, proj_iters=proj_iters,
-            mode=mode, queue_depth=queue_depth, rate_floor=rate_floor,
+            batch, algorithms, backend=backend, mode=mode,
+            queue_depth=queue_depth, rate_floor=rate_floor,
         )
     if mode == "lifecycle" and batch.works is None:
         raise ValueError(
@@ -355,8 +401,7 @@ def run_grid_sharded(
     out: dict = {}
     for name in algorithms:
         fn = _sharded_grid_fn(
-            mesh, name, mode, proj_iters,
-            _algorithm_backend(name, backend), queue_depth,
+            mesh, name, mode, _algorithm_backend(name, backend), queue_depth,
         )
         if mode == "lifecycle":
             res = fn(
@@ -416,10 +461,10 @@ def run_grid_stream(
     chunk_size: int = 64,
     mode: str = "slot",
     sharded: bool = False,
-    backend: str = "reference",
-    proj_iters: int = 64,
+    backend: str = "auto",
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
+    donate: bool = False,
 ) -> Iterator[tuple[slice, SweepBatch, dict]]:
     """Stream a grid chunk by chunk: yields ``(grid_slice, batch, outputs)``.
 
@@ -429,22 +474,35 @@ def run_grid_stream(
     ``sharded=True`` routes each chunk through ``run_grid_sharded`` (chunks
     then shard over the device mesh; keep chunk_size a multiple of the
     device count to avoid padding).
+
+    ``donate=True`` donates each chunk's arrival/work buffers to the final
+    algorithm's dispatch (run_grid's donation) to cap peak device memory;
+    the yielded batch then carries ``arrivals=None`` / ``works=None``.
+    Ignored on CPU and under ``sharded=True``.
     """
+    donate = (
+        donate and not sharded and jax.default_backend() != "cpu"
+        and _donation_applies(algorithms, mode)
+    )
     runner = run_grid_sharded if sharded else run_grid
+    kw = {"donate": True} if donate else {}
     for sl, batch in iter_batches(points, chunk_size, mode=mode):
         out = runner(
-            batch, algorithms, backend=backend, proj_iters=proj_iters,
-            mode=mode, queue_depth=queue_depth, rate_floor=rate_floor,
+            batch, algorithms, backend=backend, mode=mode,
+            queue_depth=queue_depth, rate_floor=rate_floor, **kw,
         )
         g = sl.stop - sl.start
-        if g < batch.size:
+        trim = g < batch.size
+        if trim:
             out = {n: jax.tree.map(lambda l: l[:g], v) for n, v in out.items()}
+        if trim or donate:
             batch = SweepBatch(
                 spec=jax.tree.map(lambda l: l[:g], batch.spec),
-                arrivals=batch.arrivals[:g],
+                arrivals=None if donate else batch.arrivals[:g],
                 eta0=batch.eta0[:g],
                 decay=batch.decay[:g],
-                works=None if batch.works is None else batch.works[:g],
+                works=None if donate or batch.works is None
+                else batch.works[:g],
                 points=batch.points,
             )
         yield sl, batch, out
@@ -457,8 +515,7 @@ def sweep_stream(
     chunk_size: int = 64,
     mode: str = "slot",
     sharded: bool = False,
-    backend: str = "reference",
-    proj_iters: int = 64,
+    backend: str = "auto",
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
 ) -> dict[str, np.ndarray]:
@@ -467,14 +524,15 @@ def sweep_stream(
     Returns exactly what ``summarize`` (slot mode) / ``summarize_lifecycle``
     (lifecycle mode) return for a resident ``run_grid`` of the same points —
     {metric/name: (G,)} — but with peak memory bounded by ``chunk_size``
-    configs. Reduction happens per chunk; only the (G,)-sized summary rows
+    configs. Reduction happens per chunk (chunk input buffers donated to
+    the final dispatch off-CPU); only the (G,)-sized summary rows
     accumulate.
     """
     parts: dict[str, list[np.ndarray]] = {}
     for _, batch, out in run_grid_stream(
         points, algorithms, chunk_size=chunk_size, mode=mode,
-        sharded=sharded, backend=backend, proj_iters=proj_iters,
-        queue_depth=queue_depth, rate_floor=rate_floor,
+        sharded=sharded, backend=backend,
+        queue_depth=queue_depth, rate_floor=rate_floor, donate=True,
     ):
         summ = (
             summarize_lifecycle(out, batch) if mode == "lifecycle"

@@ -53,13 +53,40 @@ def test_fused_matches_reference_all_utility_kinds(utility):
     np.testing.assert_allclose(np.asarray(y_fus), np.asarray(y_ref), atol=1e-4)
 
 
-def test_auto_backend_resolves_off_tpu():
-    # On the CPU test runner "auto" must pick the reference path.
-    assert ops.resolve_oga_backend("auto") in ("fused", "reference")
-    if jax.default_backend() != "tpu":
-        assert ops.resolve_oga_backend("auto") == "reference"
+def test_auto_backend_resolves_to_fused():
+    # "auto" is "fused" everywhere since the off-TPU fused path became the
+    # pure-jnp packed-row update with the exact sorted projection (no Pallas
+    # interpreter in the loop).
+    assert ops.resolve_oga_backend("auto") == "fused"
+    assert ops.resolve_oga_backend("reference") == "reference"
     with pytest.raises(ValueError):
         ops.resolve_oga_backend("nope")
+
+
+def test_run_batch_matches_per_config_runs():
+    """Grid-flattened fused scan (one row-kernel call per step for all G
+    configs, N = G*R*K rows) == G independent fused runs, bitwise: the
+    flattening is a pure re-layout of the same per-row arithmetic."""
+    from repro.sched import sweep, trace as _trace
+
+    base = _trace.TraceConfig(T=30, L=5, R=9, K=3)
+    points = sweep.make_grid(base, eta0s=(8.0, 20.0), seeds=(0, 3))
+    batch = sweep.build_batch(points)
+    rewards, y_final = ogasched.run_batch(
+        batch.spec, batch.arrivals, batch.eta0, batch.decay
+    )
+    assert rewards.shape == (4, base.T)
+    for i, p in enumerate(points):
+        spec, arr = _trace.make(p.cfg)
+        r, y = ogasched.run(
+            spec, arr, eta0=p.eta0, decay=p.decay, backend="fused"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(rewards[i]), np.asarray(r), err_msg=f"config {i}"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(y_final[i]), np.asarray(y), err_msg=f"config {i}"
+        )
 
 
 def test_pack_unpack_roundtrip():

@@ -59,6 +59,107 @@ def test_exact_satisfies_kkt(seed):
             assert z[i] - tau >= a[i] - 1e-6
 
 
+# ------------------------------------------------- sorted breakpoint sweep --
+def _rows_oracle(z, a, mask, c):
+    want = np.zeros_like(z)
+    for i in range(z.shape[0]):
+        lanes = mask[i] > 0
+        if lanes.any():
+            want[i, lanes] = proj.project_exact_np(
+                z[i, lanes], a[i, lanes], float(c[i])
+            )
+    return want
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_sorted_rows_match_exact_property(seed):
+    """project_rows_sorted == exact numpy oracle to 1e-6, random specs:
+    random masks (incl. empty rows), caps, capacities, pre-projection
+    points both feasible and wildly infeasible."""
+    rng = np.random.default_rng(seed)
+    N = int(rng.integers(1, 24))
+    L = int(rng.integers(1, 16))
+    z = rng.normal(0, 5, (N, L)).astype(np.float32)
+    a = rng.uniform(0.0, 4.0, (N, L)).astype(np.float32)
+    mask = (rng.random((N, L)) < rng.uniform(0.1, 1.0)).astype(np.float32)
+    c = rng.uniform(0.0, 8.0, N).astype(np.float32)
+    got = np.asarray(proj.project_rows_sorted(
+        jnp.asarray(z), jnp.asarray(a), jnp.asarray(mask), jnp.asarray(c)
+    ))
+    np.testing.assert_allclose(got, _rows_oracle(z, a, mask, c), atol=1e-6)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_sorted_cluster_matches_exact_property(seed):
+    """Spec-level project_sorted == per-cell exact oracle on random specs."""
+    rng = np.random.default_rng(seed)
+    cfg = trace.TraceConfig(
+        L=int(rng.integers(2, 8)), R=int(rng.integers(2, 12)),
+        K=int(rng.integers(1, 5)), seed=int(rng.integers(0, 100)),
+    )
+    spec = trace.build_spec(cfg)
+    z = rng.normal(0, 30, (spec.L, spec.R, spec.K)).astype(np.float32)
+    got = np.asarray(proj.project_sorted(
+        jnp.asarray(z), spec.a, spec.c, spec.mask
+    ))
+    want = proj.project_cluster_np(spec, z, method="exact")
+    np.testing.assert_allclose(got, want, atol=1e-6 * max(1.0, np.abs(z).max()))
+
+
+def test_sorted_edge_cases():
+    """Empty-port cells, zero capacity, all-at-cap, duplicate breakpoints,
+    and tau landing exactly on a breakpoint."""
+    a = jnp.ones((1, 3))
+    ones = jnp.ones((1, 3))
+
+    # empty-port cell (mask all zero): projection is identically zero
+    out = proj.project_rows_sorted(
+        jnp.asarray([[5.0, -2.0, 3.0]]), a, jnp.zeros((1, 3)),
+        jnp.asarray([2.0]),
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((1, 3)))
+
+    # zero capacity: tau rises to max z, projection is zero
+    out = proj.project_rows_sorted(
+        jnp.asarray([[3.0, 2.0, 1.0]]), a, ones, jnp.asarray([0.0])
+    )
+    np.testing.assert_allclose(np.asarray(out), np.zeros((1, 3)), atol=1e-6)
+
+    # all-at-cap but feasible: box path, no water level
+    out = proj.project_rows_sorted(
+        jnp.asarray([[9.0, 9.0, 9.0]]), a, ones, jnp.asarray([3.0])
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.ones((1, 3)))
+
+    # duplicate breakpoints: identical lanes => equal split
+    out = proj.project_rows_sorted(
+        jnp.asarray([[2.0, 2.0, 2.0]]), a, ones, jnp.asarray([1.5])
+    )
+    np.testing.assert_allclose(np.asarray(out), np.full((1, 3), 0.5), atol=1e-6)
+
+    # tau exactly on a breakpoint: z = [2, 1], a = 1, c = 1 => tau = 1 is
+    # both the solution and the breakpoint z_2 - a_2 = z_1 - a_1 = 1 tie
+    out = proj.project_rows_sorted(
+        jnp.asarray([[2.0, 1.0]]), jnp.ones((1, 2)), jnp.ones((1, 2)),
+        jnp.asarray([1.0]),
+    )
+    np.testing.assert_allclose(np.asarray(out), [[1.0, 0.0]], atol=1e-6)
+
+
+def test_project_method_switch():
+    """project(method=) dispatches sorted vs bisect and rejects unknowns;
+    the two agree to bisection tolerance on a real spec."""
+    spec = trace.build_spec(trace.TraceConfig(L=5, R=9, K=4, seed=2))
+    z = jax.random.normal(jax.random.PRNGKey(3), (5, 9, 4)) * 20.0
+    srt = proj.project(spec, z)  # sorted default
+    bis = proj.project(spec, z, method="bisect")
+    np.testing.assert_allclose(np.asarray(srt), np.asarray(bis), atol=5e-4)
+    with pytest.raises(ValueError):
+        proj.project(spec, z, method="nope")
+
+
 def test_bisection_matches_exact_cluster():
     spec = trace.build_spec(trace.TraceConfig(L=7, R=17, K=6, seed=3))
     key = jax.random.PRNGKey(0)

@@ -26,15 +26,21 @@ def run(quick: bool = True) -> list[dict]:
     def rec(name: str, us: float, **extra):
         records.append({"name": name, "us_per_call": round(us, 2), **extra})
 
-    # Projection at two row shapes: the production regime (rows = (r, k)
-    # cells, lanes = L ports, L small) where the exact breakpoint sweep's
-    # O(L) passes beat 64 bisection passes, and a wide-lane shape where the
-    # sweep's all-pairs (N, 2L, L) evaluation loses to bisection — the
-    # crossover documented in docs/kernels.md and the reason the TPU kernel
-    # keeps (seeded, shortened) bisection.
+    # Projection across the lane-width spectrum: the production regime
+    # (rows = (r, k) cells, lanes = L ports, L small) where the all-pairs
+    # breakpoint evaluation wins, a mid-width shape, and a wide-lane shape
+    # past the measured all-pairs/sortscan crossover
+    # (projection.SORTSCAN_MIN_L) where the one-sort prefix-sum sweep takes
+    # over. Every shape times bisect64 + both exact evaluation paths and
+    # marks which one project_rows_sorted dispatches to, so the crossover
+    # constant is re-certified per release.
     key = jax.random.PRNGKey(0)
     kz, ka, kc = jax.random.split(key, 3)
-    shapes = [(768, 10), (256, 64)] if quick else [(3072, 16), (768, 128)]
+    shapes = (
+        [(768, 10), (256, 64), (64, 256)] if quick
+        else [(3072, 16), (768, 128), (128, 256)]
+    )
+    cross_records = []
     for N, L in shapes:
         z = jax.random.normal(kz, (N, L)) * 5
         a = jax.random.uniform(ka, (N, L), minval=0.1, maxval=4.0)
@@ -47,14 +53,37 @@ def run(quick: bool = True) -> list[dict]:
         emit(f"kernel.proj.jnp_bisect64.N={N}.L={L}", us, "")
         rec("kernel.proj.jnp_bisect64", us, N=N, L=L)
 
-        jit_sorted = jax.jit(ref.proj_rows_sorted)
-        out_s = jit_sorted(z, a, mask, c).block_until_ready()
-        _, us_s = timed(jit_sorted, z, a, mask, c, repeats=20)
-        err_s = float(jnp.max(jnp.abs(out_s - jit_ref(z, a, mask, c))))
-        emit(f"kernel.proj.jnp_sorted.N={N}.L={L}", us_s,
-             f"max_err_vs_bisect64={err_s:.2e}")
-        rec("kernel.proj.jnp_sorted", us_s, N=N, L=L,
-            speedup_vs_bisect64=round(us / max(us_s, 1e-9), 2))
+        variants = {}
+        for vname, fn in (
+            ("allpairs", ref.proj_rows_allpairs),
+            ("sortscan", ref.proj_rows_sortscan),
+        ):
+            jit_v = jax.jit(fn)
+            out_v = jit_v(z, a, mask, c).block_until_ready()
+            _, us_v = timed(jit_v, z, a, mask, c, repeats=20)
+            variants[vname] = us_v
+            err_v = float(jnp.max(jnp.abs(out_v - jit_ref(z, a, mask, c))))
+            dispatched = (
+                vname == "sortscan"
+            ) == (L >= projection.SORTSCAN_MIN_L)
+            emit(f"kernel.proj.jnp_{vname}.N={N}.L={L}", us_v,
+                 f"max_err_vs_bisect64={err_v:.2e};dispatched={dispatched}")
+            rec(f"kernel.proj.jnp_{vname}", us_v, N=N, L=L,
+                dispatched=dispatched,
+                speedup_vs_bisect64=round(us / max(us_v, 1e-9), 2))
+        cross_records.append(
+            {"N": N, "L": L,
+             "sortscan_speedup_vs_allpairs": round(
+                 variants["allpairs"] / max(variants["sortscan"], 1e-9), 2)}
+        )
+    # the dispatch constant itself, machine-readable: below it all-pairs
+    # must win, above it sortscan must win
+    emit("kernel.proj.sortscan_crossover", 0.0,
+         f"SORTSCAN_MIN_L={projection.SORTSCAN_MIN_L};" + ";".join(
+             f"L={r['L']}:x{r['sortscan_speedup_vs_allpairs']}"
+             for r in cross_records))
+    rec("kernel.proj.sortscan_crossover", 0.0,
+        sortscan_min_l=projection.SORTSCAN_MIN_L, shapes=cross_records)
 
     N, L = shapes[0]  # the remaining kernels run at the production shape
     z = jax.random.normal(kz, (N, L)) * 5

@@ -36,7 +36,9 @@ for p, avg, imp in zip(points, summary["avg/ogasched"],
           f"avg_reward={avg:8.2f}  vs fairness {imp:+.2f}%")
 
 # Big grids stream in chunks instead (same numbers, O(chunk) memory, and
-# the grid axis shards over a device mesh when one is available):
+# the grid axis shards over a device mesh when one is available). Chunk
+# traces for large grids are synthesized ON-DEVICE (trace_backend="auto")
+# and prefetched on a background thread, so the stream is compute-bound:
 #   points = sweep.make_grid(cfg, seeds=range(10_000))
 #   summary = sweep.sweep_stream(points, chunk_size=256, sharded=True)
 

@@ -9,14 +9,16 @@ Water-filling form: yhat_l = clip(z_l - tau, 0, a_l) with tau = 0 when
 sum_l clip(z_l, 0, a_l) <= c, otherwise tau > 0 solving
 g(tau) = sum_l clip(z_l - tau, 0, a_l) = c  (tau = rho_r^k / 2 in eq. 34-35).
 
-Four implementations:
+Implementations:
   * ``project_sorted``    — exact vectorised breakpoint sweep over the 2L
     breakpoints {z_l, z_l - a_l} per (r, k) cell: evaluate the piecewise
-    linear g(tau) at every breakpoint at once, then solve for tau in closed
-    form on the bracketing segment. Two clip/sum passes + one all-pairs
-    reduction instead of 64 clip+sum passes; the production default
-    (``project``). See ``project_rows_sorted`` for why the sort itself is
-    never materialised.
+    linear g(tau) at every breakpoint, then solve for tau in closed form on
+    the bracketing segment; the production default (``project``). The
+    row-level entry ``project_rows_sorted`` dispatches on the lane count:
+    ``project_rows_allpairs`` (no materialised sort, O(L^2) all-pairs
+    evaluation — fastest at the narrow production L) below
+    ``SORTSCAN_MIN_L``, ``project_rows_sortscan`` (one sort + prefix sums,
+    O(L log L)) at wide lanes where the quadratic term dominates.
   * ``project_bisection`` — branch-free fixed-iteration bisection on tau,
     vectorised over all (r, k); kept behind ``method="bisect"`` for A/B and
     as the oracle-independent baseline for kernels/proj_bisect.
@@ -72,25 +74,53 @@ def project_bisection(
     return jnp.where(need[None, :, :], proj, box)
 
 
-def project_rows_sorted(
+# Lane count at which project_rows_sorted switches from the all-pairs
+# O(L^2) breakpoint evaluation to the one-sort O(L log L) prefix-sum sweep.
+# Below it the all-pairs (N, 2L, L) reduction is pure vector code and wins;
+# above it the quadratic term takes over completely (on XLA:CPU all-pairs
+# jumps from ~6 ms at (128, 160) to ~36 ms at (128, 192) while the sweep
+# stays ~10-16 ms out to L=256 — ~4x ahead by then; BENCH_kernels.json
+# records 4.2x at the bench's (64, 256) shape). The crossover is
+# sort-cost bound: XLA:CPU lowers the sort primitive to comparator loops at
+# ~25 us/row, which is also why the sweep cannot help the mid-width L=64
+# regime here (hardware-sort backends cross over far lower).
+# benchmarks/bench_kernels.py measures and records both paths per release.
+SORTSCAN_MIN_L = 192
+
+
+def _finish_water_level(zf, af, m, cf, lo, box, need):
+    """Shared closed-form tail of both breakpoint sweeps: given the last
+    breakpoint ``lo`` with g(lo) >= c, recompute g(lo) and the segment
+    slope exactly in one O(L) pass, solve for tau, and water-fill."""
+    glo = jnp.sum(jnp.clip(zf - lo, 0.0, af) * m, axis=-1, keepdims=True)
+    # slope just right of lo: lanes interior on (lo, next breakpoint)
+    n = jnp.sum(m * (zf - af <= lo) * (zf > lo), axis=-1, keepdims=True)
+    # n = 0 means g is flat at exactly c past lo (ties / c = 0): tau = lo.
+    tau = jnp.where(n > 0.5, lo + (glo - cf) / jnp.maximum(n, 1.0), lo)
+    tau = jnp.maximum(tau, 0.0)
+    proj = jnp.clip(zf - tau, 0.0, af) * m
+    return jnp.where(need, proj, box)
+
+
+def project_rows_allpairs(
     z: jax.Array, a: jax.Array, mask: jax.Array, c: jax.Array
 ) -> jax.Array:
-    """Exact projection of each row of z onto {0 <= y <= a, sum(y*m) <= c}.
+    """Exact row projection via all-pairs breakpoint evaluation — O(L^2).
 
-    z, a, mask: (N, L); c: (N,). Water-filling y = clip(z - tau, 0, a) with
+    Water-filling y = clip(z - tau, 0, a) with
     g(tau) = sum_l clip(z_l - tau, 0, a_l): g is convex, non-increasing,
     piecewise linear with breakpoints at z_l - a_l (lane leaves the a-clamp)
     and z_l (lane hits the 0-clamp). In sorted-breakpoint order the crossing
     g(tau) = c lies on the segment right of lo = max{v : g(v) >= c}, where g
     is linear with slope -n(lo), n(lo) = |{l : z_l - a_l <= lo < z_l}| — so
     tau = lo + (g(lo) - c) / n(lo) in closed form (heSRPT's per-segment
-    solution). Rather than materialising the sort (XLA:CPU lowers the sort
-    primitive to scalar loops that cost more than the 64-pass bisection this
-    replaces), g is evaluated at ALL 2L breakpoints with one vectorised
-    all-pairs clip/sum — sorted order only ever enters through the max — so
-    the whole projection is two clip/sum passes plus one (N, 2L, L)
-    elementwise reduction, exact to f32 rounding (certified against
-    ``project_exact_np``).
+    solution). Rather than materialising a sort, g is evaluated at ALL 2L
+    breakpoints with one vectorised all-pairs clip/sum — sorted order only
+    ever enters through the max — so the whole projection is two clip/sum
+    passes plus one (N, 2L, L) elementwise reduction, exact to f32 rounding
+    (certified against ``project_exact_np``). The O(L^2) term is free at
+    the narrow production lane counts but dominates at wide lanes, where
+    ``project_rows_sortscan`` takes over (``SORTSCAN_MIN_L``).
     """
     f32 = jnp.promote_types(z.dtype, jnp.float32)
     m = mask.astype(f32)
@@ -113,14 +143,71 @@ def project_rows_sorted(
     # Last breakpoint on/above level c. On `need` rows the set is non-empty:
     # g(min v) = sum(a*m) >= sum(box) > c. The crossing sits on [lo, next).
     lo = jnp.max(jnp.where(gv >= cf, v, _NEG), axis=-1, keepdims=True)
-    glo = jnp.sum(jnp.clip(zf - lo, 0.0, af) * m, axis=-1, keepdims=True)
-    # slope just right of lo: lanes interior on (lo, next breakpoint)
-    n = jnp.sum(m * (zf - af <= lo) * (zf > lo), axis=-1, keepdims=True)
-    # n = 0 means g is flat at exactly c past lo (ties / c = 0): tau = lo.
-    tau = jnp.where(n > 0.5, lo + (glo - cf) / jnp.maximum(n, 1.0), lo)
-    tau = jnp.maximum(tau, 0.0)
-    proj = jnp.clip(zf - tau, 0.0, af) * m
-    return jnp.where(need, proj, box).astype(z.dtype)
+    return _finish_water_level(zf, af, m, cf, lo, box, need).astype(z.dtype)
+
+
+def project_rows_sortscan(
+    z: jax.Array, a: jax.Array, mask: jax.Array, c: jax.Array
+) -> jax.Array:
+    """Exact row projection via one sort + prefix sums — O(L log L).
+
+    Same piecewise-linear water-level argument as
+    ``project_rows_allpairs``, but g is evaluated at the 2L breakpoints
+    incrementally instead of by the all-pairs reduction: sort the
+    breakpoints ascending with their slope deltas (+1 when lane l becomes
+    interior at z_l - a_l, -1 when it hits the 0-clamp at z_l), prefix-sum
+    the deltas to the active-lane count n_j on each segment, and walk
+    g(v_{j+1}) = g(v_j) - n_j * (v_{j+1} - v_j) as a second prefix sum from
+    g(v_0) = sum_l m_l clip(z_l - v_0, 0, a_l). The prefix-summed g only
+    ever *selects* the bracketing segment; g(lo) and the slope are then
+    recomputed directly in O(L) (``_finish_water_level``), so accumulation
+    rounding cannot leak into the result beyond segment-tie jitter — parity
+    with ``project_exact_np`` stays <= 1e-6 (tests/test_projection.py).
+    """
+    f32 = jnp.promote_types(z.dtype, jnp.float32)
+    m = mask.astype(f32)
+    zf = z.astype(f32)
+    af = a.astype(f32)
+    cf = c.astype(f32)[:, None]  # (N, 1)
+
+    box = jnp.clip(zf, 0.0, af) * m
+    need = jnp.sum(box, axis=-1, keepdims=True) > cf
+
+    v = jnp.concatenate([zf - af, zf], axis=-1)  # (N, 2L) breakpoints
+    d = jnp.concatenate([m, -m], axis=-1)        # slope deltas (masked: 0)
+    order = jnp.argsort(v, axis=-1)
+    vs = jnp.take_along_axis(v, order, axis=-1)
+    ds = jnp.take_along_axis(d, order, axis=-1)
+    # active-lane count on the segment [vs_j, vs_{j+1}): prefix sum of the
+    # deltas through breakpoint j (a lane is interior once its z - a event
+    # has passed and its z event has not)
+    n_seg = jnp.cumsum(ds, axis=-1)
+    # g at the first (smallest) breakpoint, computed directly in O(L)
+    g0 = jnp.sum(
+        jnp.clip(zf - vs[:, :1], 0.0, af) * m, axis=-1, keepdims=True
+    )
+    # g at every later breakpoint: subtract the accumulated linear drops
+    seg = n_seg[:, :-1] * (vs[:, 1:] - vs[:, :-1])
+    gv = g0 - jnp.concatenate(
+        [jnp.zeros_like(g0), jnp.cumsum(seg, axis=-1)], axis=-1
+    )  # (N, 2L), non-increasing
+    lo = jnp.max(jnp.where(gv >= cf, vs, _NEG), axis=-1, keepdims=True)
+    return _finish_water_level(zf, af, m, cf, lo, box, need).astype(z.dtype)
+
+
+def project_rows_sorted(
+    z: jax.Array, a: jax.Array, mask: jax.Array, c: jax.Array
+) -> jax.Array:
+    """Exact projection of each row of z onto {0 <= y <= a, sum(y*m) <= c}.
+
+    z, a, mask: (N, L); c: (N,). Dispatches on the (static) lane count:
+    narrow rows (L < SORTSCAN_MIN_L, the production scheduler regime) use
+    the all-pairs breakpoint evaluation, wide rows the one-sort prefix-sum
+    sweep — both exact, crossover measured in benchmarks/bench_kernels.py.
+    """
+    if z.shape[-1] < SORTSCAN_MIN_L:
+        return project_rows_allpairs(z, a, mask, c)
+    return project_rows_sortscan(z, a, mask, c)
 
 
 def project_sorted(

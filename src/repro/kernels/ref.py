@@ -9,8 +9,19 @@ from repro.models import attention as _attn
 
 
 def proj_rows_sorted(z, a, mask, c):
-    """Exact one-sort breakpoint-sweep row projection (core.projection)."""
+    """Exact breakpoint-sweep row projection (core.projection): dispatches
+    all-pairs (narrow lanes) vs one-sort prefix-sum (wide lanes)."""
     return _proj.project_rows_sorted(z, a, mask, c)
+
+
+def proj_rows_allpairs(z, a, mask, c):
+    """The all-pairs O(L^2) breakpoint evaluation, forced (bench A/B)."""
+    return _proj.project_rows_allpairs(z, a, mask, c)
+
+
+def proj_rows_sortscan(z, a, mask, c):
+    """The one-sort + prefix-sum O(L log L) evaluation, forced (bench A/B)."""
+    return _proj.project_rows_sortscan(z, a, mask, c)
 
 
 def proj_rows_ref(z, a, mask, c, iters: int = 64):

@@ -255,9 +255,12 @@ def run(
     """Run one algorithm through the job lifecycle over a trace.
 
     Args:
-      arrivals: (T, L) arrival indicators (trace.build_arrivals).
-      works:    (T, L) sampled job sizes in work units (trace.build_works);
-                works[t, l] is consumed iff a job arrives at (t, l).
+      arrivals: (T, L) arrival indicators (trace.build_arrivals, or a row
+                of a device-synthesized batch — sched.trace_device).
+      works:    (T, L) sampled job sizes in work units (trace.build_works
+                or the ``works`` leaf of a trace batch from either
+                backend); works[t, l] is consumed iff a job arrives at
+                (t, l). Must match ``arrivals``' shape.
       algorithm: "ogasched" or a baseline name (baselines.BASELINES).
       eta0, decay: OGA hyperparameters; traced arrays vmap (sched.sweep).
       queue_depth: per-port FIFO bound; overflowing arrivals are dropped.
@@ -270,6 +273,11 @@ def run(
         port to the rate floor, blocking the port for the entire trace.
     Returns: LifecycleTrace of per-slot events (leaves lead with T).
     """
+    if works.shape != arrivals.shape:
+        raise ValueError(
+            "works must pair 1:1 with arrivals: got works "
+            f"{works.shape} vs arrivals {arrivals.shape}"
+        )
     backend = ops.resolve_oga_backend(backend)
     use_oga = algorithm == "ogasched"
     operands = ops.pack_spec_operands(spec) if use_oga and backend == "fused" else None

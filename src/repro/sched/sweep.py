@@ -9,8 +9,11 @@ algorithm's scan runs for all configurations simultaneously.
 
 Layers:
   * ``make_grid``         — cartesian product of sweep axes -> list[SweepPoint].
-  * ``build_batch``       — host-side trace generation + leaf stacking
-                            (trace.make_batch; works only in lifecycle mode).
+  * ``build_batch``       — trace generation + leaf stacking
+                            (trace.make_batch; works only in lifecycle mode;
+                            ``trace_backend`` picks host numpy — the
+                            bitwise-pinned golden path — or one jitted
+                            vmapped device synthesis, sched.trace_device).
   * ``run_algorithm``     — single-config rewards; the one code path shared by
                             ``simulator.run_all`` and the vectorised grid.
   * ``run_grid``          — one jitted dispatch per algorithm over the stacked
@@ -25,6 +28,11 @@ Layers:
                           — chunked driver: generate, run, and reduce the
                             grid CHUNK_SIZE configs at a time, so 10k-config
                             grids never materialize (G, T, ...) tensors.
+                            Chunk prep is double-buffered on a background
+                            thread (``iter_batches(prefetch=)``) and large
+                            grids synthesize traces on-device by default
+                            (``trace_backend="auto"``), so the stream is
+                            compute-bound, not trace-bound.
   * ``summarize`` / ``summarize_lifecycle``
                           — per-config reductions (signed-safe improvement
                             percentages; jitted lifecycle.summarize_batch).
@@ -42,6 +50,9 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import queue as queue_mod
+import threading
+import time
 from functools import lru_cache, partial
 from typing import Iterator, Optional, Sequence
 
@@ -128,19 +139,47 @@ def make_grid(
     return points
 
 
-def build_batch(
-    points: Sequence[SweepPoint], mode: str = "slot"
-) -> SweepBatch:
-    """Generate every point's trace on the host and stack the leaves.
+# "auto" trace backend: grids at or above this many points stream
+# device-synthesized traces (sched.trace_device); smaller grids keep the
+# bitwise-pinned host path so resident/streamed comparisons stay exact.
+DEVICE_TRACE_MIN_POINTS = 1024
 
-    mode="lifecycle" additionally samples per-job work sizes
-    (trace.build_works); slot-mode batches carry ``works=None``.
+TRACE_BACKENDS = ("auto",) + trace.TRACE_BACKENDS
+
+
+def resolve_trace_backend(trace_backend: str, n_points: int) -> str:
+    """"auto" -> "device" for large grids (>= DEVICE_TRACE_MIN_POINTS
+    points, where host-side numpy generation would dominate the stream),
+    "host" otherwise."""
+    if trace_backend not in TRACE_BACKENDS:
+        raise ValueError(
+            f"trace_backend must be one of {TRACE_BACKENDS}, "
+            f"got {trace_backend!r}"
+        )
+    if trace_backend == "auto":
+        return "device" if n_points >= DEVICE_TRACE_MIN_POINTS else "host"
+    return trace_backend
+
+
+def build_batch(
+    points: Sequence[SweepPoint],
+    mode: str = "slot",
+    *,
+    trace_backend: str = "host",
+) -> SweepBatch:
+    """Generate every point's trace and stack the leaves.
+
+    mode="lifecycle" additionally samples per-job work sizes; slot-mode
+    batches carry ``works=None``. ``trace_backend`` selects host numpy
+    (bitwise-pinned golden path, the default) or one jitted vmapped device
+    generation (``trace.make_batch(trace_backend="device")``).
     """
     _check_mode(mode)
     if not points:
         raise ValueError("empty sweep grid")
     spec, arrivals, works = trace.make_batch(
-        [p.cfg for p in points], with_works=mode == "lifecycle"
+        [p.cfg for p in points], with_works=mode == "lifecycle",
+        trace_backend=resolve_trace_backend(trace_backend, len(points)),
     )
     return SweepBatch(
         spec=spec,
@@ -421,25 +460,16 @@ def run_grid_sharded(
 # every chunk reuses one compiled program, then trimmed before it is yielded.
 # --------------------------------------------------------------------------
 
-def iter_batches(
+def _chunk_batches(
     points: Sequence[SweepPoint],
     chunk_size: int,
-    *,
-    mode: str = "slot",
+    mode: str,
+    trace_backend: str,
 ) -> Iterator[tuple[slice, SweepBatch]]:
-    """Yield ``(grid_slice, batch)`` chunks of a point list.
-
-    Each batch carries exactly ``chunk_size`` rows: a final partial chunk is
-    padded by repeating its already-generated last row (``_pad_rows``, no
-    extra trace generation), while ``points`` keeps only the real points.
-    ``grid_slice`` is the un-padded range of the full grid the chunk covers,
-    so ``batch.arrivals[: sl.stop - sl.start]`` are the real rows.
-    """
-    if chunk_size < 1:
-        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    """Synchronous chunk generation — the prefetch worker's body."""
     for start in range(0, len(points), chunk_size):
         chunk = list(points[start:start + chunk_size])
-        batch = build_batch(chunk, mode=mode)
+        batch = build_batch(chunk, mode=mode, trace_backend=trace_backend)
         pad = chunk_size - len(chunk)
         if pad:
             batch = SweepBatch(
@@ -454,6 +484,101 @@ def iter_batches(
         yield slice(start, start + len(chunk)), batch
 
 
+class _PrefetchFailed:
+    """Worker-thread exception carrier (re-raised on the consumer side)."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+_DONE = object()
+
+
+def _prefetched(it: Iterator, depth: int) -> Iterator:
+    """Drive ``it`` on a background thread through a bounded queue.
+
+    The producer stays exactly ``depth`` items ahead of the consumer —
+    double-buffering at the default depth 2 — so host-side chunk prep
+    (trace generation, padding, device upload) overlaps the device compute
+    the consumer dispatches. Order is preserved, exceptions propagate, and
+    abandoning the iterator (``close``/GeneratorExit) stops the worker.
+    """
+    q: queue_mod.Queue = queue_mod.Queue(maxsize=depth)
+    stop = threading.Event()
+
+    def _put(item) -> bool:
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue_mod.Full:
+                continue
+        return False
+
+    def worker():
+        try:
+            for item in it:
+                if not _put(item):
+                    return
+            _put(_DONE)
+        except BaseException as exc:  # re-raised by the consumer
+            _put(_PrefetchFailed(exc))
+
+    t = threading.Thread(
+        target=worker, name="sweep-chunk-prefetch", daemon=True
+    )
+    t.start()
+    try:
+        while True:
+            item = q.get()
+            if item is _DONE:
+                return
+            if isinstance(item, _PrefetchFailed):
+                raise item.exc
+            yield item
+    finally:
+        stop.set()
+        # Wait (bounded) for the worker to notice: a daemon thread killed
+        # mid-XLA-dispatch at interpreter teardown aborts the process. The
+        # worker re-checks ``stop`` every 0.1 s when queue-blocked, so the
+        # only wait is the chunk generation already in flight.
+        t.join(timeout=30.0)
+
+
+def iter_batches(
+    points: Sequence[SweepPoint],
+    chunk_size: int,
+    *,
+    mode: str = "slot",
+    trace_backend: str = "host",
+    prefetch: int = 2,
+) -> Iterator[tuple[slice, SweepBatch]]:
+    """Yield ``(grid_slice, batch)`` chunks of a point list.
+
+    Each batch carries exactly ``chunk_size`` rows: a final partial chunk is
+    padded by repeating its already-generated last row (``_pad_rows``, no
+    extra trace generation), while ``points`` keeps only the real points.
+    ``grid_slice`` is the un-padded range of the full grid the chunk covers,
+    so ``batch.arrivals[: sl.stop - sl.start]`` are the real rows.
+
+    ``prefetch`` > 0 generates chunks on a background thread through a
+    bounded queue of that depth (default 2: double buffering), so the next
+    chunk's trace synthesis and upload overlap the caller's device compute
+    instead of serializing with it. ``prefetch=0`` keeps the old fully
+    synchronous behaviour. Chunk order and contents are identical either
+    way. ``trace_backend`` is resolved against the FULL grid size (not the
+    chunk), so "auto" picks the device path exactly when the grid is large
+    enough for generation cost to matter.
+    """
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    backend = resolve_trace_backend(trace_backend, len(points))
+    it = _chunk_batches(points, chunk_size, mode, backend)
+    if prefetch > 0:
+        it = _prefetched(it, prefetch)
+    yield from it
+
+
 def run_grid_stream(
     points: Sequence[SweepPoint],
     algorithms: Sequence[str] = ALGORITHMS,
@@ -462,9 +587,12 @@ def run_grid_stream(
     mode: str = "slot",
     sharded: bool = False,
     backend: str = "auto",
+    trace_backend: str = "auto",
+    prefetch: int = 2,
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
     donate: bool = False,
+    stats: Optional[dict] = None,
 ) -> Iterator[tuple[slice, SweepBatch, dict]]:
     """Stream a grid chunk by chunk: yields ``(grid_slice, batch, outputs)``.
 
@@ -475,10 +603,28 @@ def run_grid_stream(
     then shard over the device mesh; keep chunk_size a multiple of the
     device count to avoid padding).
 
+    Chunk generation is double-buffered: ``iter_batches`` prepares the next
+    ``prefetch`` chunks on a background thread while this thread's chunk
+    computes, so the stream is compute-bound, not trace-bound.
+    ``trace_backend="auto"`` additionally synthesizes the traces of large
+    grids (>= DEVICE_TRACE_MIN_POINTS points) on-device
+    (``sched.trace_device``); smaller grids keep the bitwise-pinned host
+    path, so streamed == resident comparisons stay exact by default.
+
     ``donate=True`` donates each chunk's arrival/work buffers to the final
     algorithm's dispatch (run_grid's donation) to cap peak device memory;
     the yielded batch then carries ``arrivals=None`` / ``works=None``.
-    Ignored on CPU and under ``sharded=True``.
+    Ignored on CPU and under ``sharded=True``. Donation composes with
+    prefetching because every queued chunk is a distinct buffer set the
+    worker built independently — donating the current chunk can never
+    alias a chunk still in (or entering) the queue.
+
+    Pass a dict as ``stats`` to receive pipeline telemetry: the driver
+    accumulates ``chunk_wait_s``, the time this thread stalled waiting on
+    the prefetched chunk pipeline (trace synthesis + padding + upload that
+    the background worker failed to hide). Benchmarks derive their
+    ``overlap_ratio`` from it against the production driver itself rather
+    than a re-implementation.
     """
     donate = (
         donate and not sharded and jax.default_backend() != "cpu"
@@ -486,7 +632,20 @@ def run_grid_stream(
     )
     runner = run_grid_sharded if sharded else run_grid
     kw = {"donate": True} if donate else {}
-    for sl, batch in iter_batches(points, chunk_size, mode=mode):
+    it = iter_batches(
+        points, chunk_size, mode=mode,
+        trace_backend=trace_backend, prefetch=prefetch,
+    )
+    while True:
+        t_wait = time.monotonic()
+        item = next(it, None)
+        if stats is not None:
+            stats["chunk_wait_s"] = (
+                stats.get("chunk_wait_s", 0.0) + time.monotonic() - t_wait
+            )
+        if item is None:
+            return
+        sl, batch = item
         out = runner(
             batch, algorithms, backend=backend, mode=mode,
             queue_depth=queue_depth, rate_floor=rate_floor, **kw,
@@ -516,6 +675,8 @@ def sweep_stream(
     mode: str = "slot",
     sharded: bool = False,
     backend: str = "auto",
+    trace_backend: str = "auto",
+    prefetch: int = 2,
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
 ) -> dict[str, np.ndarray]:
@@ -526,12 +687,16 @@ def sweep_stream(
     {metric/name: (G,)} — but with peak memory bounded by ``chunk_size``
     configs. Reduction happens per chunk (chunk input buffers donated to
     the final dispatch off-CPU); only the (G,)-sized summary rows
-    accumulate.
+    accumulate. Chunk generation is prefetched on a background thread
+    (``prefetch``, default double-buffered) and ``trace_backend="auto"``
+    moves trace synthesis on-device for large grids — see
+    ``run_grid_stream``.
     """
     parts: dict[str, list[np.ndarray]] = {}
     for _, batch, out in run_grid_stream(
         points, algorithms, chunk_size=chunk_size, mode=mode,
-        sharded=sharded, backend=backend,
+        sharded=sharded, backend=backend, trace_backend=trace_backend,
+        prefetch=prefetch,
         queue_depth=queue_depth, rate_floor=rate_floor, donate=True,
     ):
         summ = (
@@ -550,14 +715,20 @@ def grid_memory_bytes(
     mode: str = "slot",
     algorithms: Sequence[str] = ALGORITHMS,
     itemsize: int = 4,
+    prefetch: int = 0,
 ) -> dict[str, int]:
     """Analytic resident-memory estimate for a G-config grid.
 
     {"inputs": stacked spec/arrival/work bytes, "outputs": every algorithm's
-    result tensors, "total": both}. The streaming driver's peak is the same
-    formula evaluated at G=chunk_size (plus O(G) summary rows). Lifecycle
-    outputs dominate: a LifecycleTrace row costs T·(2 + 6L + R·K) floats vs
-    slot mode's T.
+    result tensors, "prefetch_buffers": staged not-yet-consumed chunks,
+    "total": all of it}. The streaming driver's peak is the same formula
+    evaluated at G=chunk_size with ``prefetch`` set to its queue depth
+    (default 2): on top of the in-flight chunk the pipeline holds up to
+    ``prefetch`` queued chunks' *inputs* (their outputs don't exist yet)
+    PLUS one more the worker is building while the queue is full —
+    ``prefetch + 1`` staged chunks total — plus O(G) summary rows.
+    Lifecycle outputs dominate either way: a LifecycleTrace row costs
+    T·(2 + 6L + R·K) floats vs slot mode's T.
     """
     _check_mode(mode)
     L, R, K, T = cfg.L, cfg.R, cfg.K, cfg.T
@@ -567,10 +738,14 @@ def grid_memory_bytes(
     if mode == "lifecycle":
         inputs += T * L  # works
         per_alg = T * (2 + 6 * L + R * K)  # LifecycleTrace leaves
+    in_b = G * inputs * itemsize
+    out_b = G * per_alg * len(algorithms) * itemsize
+    pre_b = (prefetch + 1) * in_b if prefetch else 0
     return {
-        "inputs": G * inputs * itemsize,
-        "outputs": G * per_alg * len(algorithms) * itemsize,
-        "total": G * (inputs + per_alg * len(algorithms)) * itemsize,
+        "inputs": in_b,
+        "outputs": out_b,
+        "prefetch_buffers": pre_b,
+        "total": in_b + out_b + pre_b,
     }
 
 

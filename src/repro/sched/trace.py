@@ -88,6 +88,20 @@ def stream_rng(seed: int, stream: str) -> np.random.Generator:
     return np.random.default_rng(children[STREAMS.index(stream)])
 
 
+def spec_kinds(cfg: TraceConfig) -> np.ndarray:
+    """(K,) utility-family indices for a config — deterministic (no RNG),
+    shared by the host and device spec builders so they cannot drift."""
+    if cfg.utility == "mixed":
+        return np.arange(cfg.K) % utilities.NUM_KINDS
+    return np.full(cfg.K, utilities.NAME_TO_KIND[cfg.utility])
+
+
+def spec_beta(cfg: TraceConfig) -> np.ndarray:
+    """(K,) communication-overhead coefficients — deterministic linspace,
+    shared by the host and device spec builders."""
+    return np.linspace(cfg.beta_range[0], cfg.beta_range[1], cfg.K)
+
+
 def build_spec(cfg: TraceConfig) -> ClusterSpec:
     rng = stream_rng(cfg.seed, "spec")
     # instances drawn from templates with +-20% jitter
@@ -105,18 +119,22 @@ def build_spec(cfg: TraceConfig) -> ClusterSpec:
     compat = (a[:, None, :] > 0) & (c[None, :, :] > 0)
     compat_any = compat.any(-1)
     mask = (rng.uniform(size=(cfg.L, cfg.R)) < cfg.density) & compat_any
-    for l in range(cfg.L):  # ensure every port reachable
-        if not mask[l].any():
-            mask[l, rng.integers(0, cfg.R)] = True
-    for r in range(cfg.R):
-        if not mask[:, r].any():
-            mask[rng.integers(0, cfg.L), r] = True
+    # Coverage repair, vectorised: one uniform index per uncovered row, then
+    # per uncovered column (a row fix cannot empty another row, and a column
+    # fix touches only its own column, so both sets are determined up
+    # front). numpy's batched bounded-integer draws are bitwise-identical
+    # to the per-row scalar draws of the old O(L*R) Python loops — the host
+    # trace goldens (tests/test_trace.py) pin that this rewrite changed no
+    # output bits.
+    empty_l = np.nonzero(~mask.any(axis=1))[0]
+    if empty_l.size:  # ensure every port reachable
+        mask[empty_l, rng.integers(0, cfg.R, size=empty_l.size)] = True
+    empty_r = np.nonzero(~mask.any(axis=0))[0]
+    if empty_r.size:  # ensure every instance connected
+        mask[rng.integers(0, cfg.L, size=empty_r.size), empty_r] = True
     alpha = rng.uniform(*cfg.alpha_range, (cfg.R, cfg.K))
-    beta = np.linspace(cfg.beta_range[0], cfg.beta_range[1], cfg.K)
-    if cfg.utility == "mixed":
-        kinds = np.arange(cfg.K) % utilities.NUM_KINDS
-    else:
-        kinds = np.full(cfg.K, utilities.NAME_TO_KIND[cfg.utility])
+    beta = spec_beta(cfg)
+    kinds = spec_kinds(cfg)
     return ClusterSpec(
         mask=jnp.asarray(mask, jnp.float32),
         a=jnp.asarray(a, jnp.float32),
@@ -175,7 +193,21 @@ def make_lifecycle(cfg: TraceConfig):
     return build_spec(cfg), build_arrivals(cfg), build_works(cfg)
 
 
-def make_batch(cfgs, with_works: bool = False):
+TRACE_BACKENDS = ("host", "device")
+
+
+def check_batch_cfgs(cfgs) -> list:
+    """Validate a trace batch: non-empty, rectangular (L, R, K, T)."""
+    cfgs = list(cfgs)
+    if not cfgs:
+        raise ValueError("empty trace batch")
+    shapes = {(c.L, c.R, c.K, c.T) for c in cfgs}
+    if len(shapes) > 1:
+        raise ValueError(f"trace configs must share (L, R, K, T); got {shapes}")
+    return cfgs
+
+
+def make_batch(cfgs, with_works: bool = False, trace_backend: str = "host"):
     """Stacked traces for a batch of configs: (spec, arrivals[, works]) with
     every leaf carrying a leading (G,) axis.
 
@@ -184,13 +216,29 @@ def make_batch(cfgs, with_works: bool = False):
     grids); slot-mode sweeps never pay for job-size sampling. This is the
     per-chunk generation step of the streaming sweep driver
     (``sweep.run_grid_stream``), so it must stay O(len(cfgs)) in memory.
+
+    ``trace_backend`` selects where the randomness is drawn:
+
+    * ``"host"`` (default) — the bitwise-pinned numpy golden path: one
+      serial ``build_spec``/``build_arrivals``/``build_works`` per config,
+      stacked. Matches ``make``/``make_lifecycle`` exactly.
+    * ``"device"`` — one jitted, vmapped-over-the-grid generation
+      (``sched.trace_device``) from counter-based ``jax.random`` keys:
+      statistically equivalent traces (same templates, jitter ranges,
+      diurnal/burst arrival process, Lomax job sizes; pinned by
+      tests/test_trace_device.py) but a different bitstream, at a fraction
+      of the host cost for streamed chunks.
     """
-    cfgs = list(cfgs)
-    if not cfgs:
-        raise ValueError("empty trace batch")
-    shapes = {(c.L, c.R, c.K, c.T) for c in cfgs}
-    if len(shapes) > 1:
-        raise ValueError(f"trace configs must share (L, R, K, T); got {shapes}")
+    cfgs = check_batch_cfgs(cfgs)
+    if trace_backend == "device":
+        from repro.sched import trace_device
+
+        return trace_device.make_batch(cfgs, with_works=with_works)
+    if trace_backend != "host":
+        raise ValueError(
+            f"trace_backend must be one of {TRACE_BACKENDS}, "
+            f"got {trace_backend!r}"
+        )
     specs = [build_spec(c) for c in cfgs]
     spec = jax.tree.map(lambda *ls: jnp.stack(ls), *specs)
     arrivals = jnp.stack([build_arrivals(c) for c in cfgs])

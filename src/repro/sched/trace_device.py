@@ -1,0 +1,229 @@
+"""Device-resident scenario-trace synthesis.
+
+The streaming sweep driver (``sweep.run_grid_stream``) used to stall the
+device between chunks while serial host-side numpy regenerated every
+config's trace — per-chunk generation was the dominant cost of "run this
+grid" at 10k-config scale. This module moves the whole synthesis onto the
+device as ONE jitted computation vmapped over the chunk: machine/job-type
+template jitter, coverage-repaired adjacency, diurnal/burst Bernoulli
+arrivals, and heavy-tailed Lomax job sizes, all drawn from counter-based
+``jax.random`` keys.
+
+Randomness contract: per (seed, stream) independence mirrors the host
+path's ``trace.stream_rng`` SeedSequence spawning — one
+``jax.random.fold_in(PRNGKey(seed), stream_index)`` per trace component,
+so a seed axis of a grid never reuses a stream and the three components of
+one seed resample independently (tests/test_trace_device.py pins both).
+The bitstream itself intentionally differs from the numpy host path: host
+``trace.make_batch(trace_backend="host")`` stays the bitwise-pinned golden
+reference, device traces are *statistically* equivalent (same templates,
+jitter ranges, burst process, Lomax shape — parity pinned over multiple
+seeds).
+
+Everything here is pure jnp inside one vmapped ``_generate``: per-point
+scalars (seed, rho, contention) and the deterministic per-point vectors
+(utility kinds, beta) come in as stacked arrays, static shape parameters
+(L, R, K, T, density, ...) as a hashable ``DeviceStatics``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import ClusterSpec
+from repro.sched import trace
+
+# stream index for fold_in: must follow trace.STREAMS order so the device
+# derivation stays a 1:1 mirror of trace.stream_rng's spawn indices
+STREAM_INDEX = {name: i for i, name in enumerate(trace.STREAMS)}
+
+
+def stream_key(seed, stream: str) -> jax.Array:
+    """The device key for one trace component of one seed.
+
+    ``fold_in(PRNGKey(seed), index(stream))`` — counter-based, so every
+    (seed, stream) pair owns a statistically independent stream, mirroring
+    ``trace.stream_rng``'s SeedSequence-spawn guarantee. ``seed`` may be a
+    traced int array (the vmapped grid axis).
+    """
+    return jax.random.fold_in(jax.random.PRNGKey(seed), STREAM_INDEX[stream])
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceStatics:
+    """Hashable static-shape parameters of one generation program.
+
+    One compiled ``_generate`` per distinct value (lru-cached); everything
+    that varies per grid point (seed, rho, contention, utility kinds) is a
+    traced operand instead.
+    """
+
+    L: int
+    R: int
+    K: int
+    T: int
+    density: float
+    alpha_range: tuple
+    beta_range: tuple
+    diurnal: bool
+    burst_prob: float
+    work_mean: float
+    work_tail: float
+    with_works: bool
+
+    @classmethod
+    def from_cfg(cls, cfg: trace.TraceConfig, with_works: bool):
+        return cls(
+            L=cfg.L, R=cfg.R, K=cfg.K, T=cfg.T, density=cfg.density,
+            alpha_range=tuple(cfg.alpha_range),
+            beta_range=tuple(cfg.beta_range),
+            diurnal=cfg.diurnal, burst_prob=cfg.burst_prob,
+            work_mean=cfg.work_mean, work_tail=cfg.work_tail,
+            with_works=with_works,
+        )
+
+
+def _build_spec(key, contention, kinds, beta, st: DeviceStatics) -> ClusterSpec:
+    """Device twin of trace.build_spec for one config (vmapped over keys)."""
+    k_c, k_cj, k_aj, k_mask, k_row, k_col, k_alpha = jax.random.split(key, 7)
+    machines = jnp.asarray(trace.MACHINE_TEMPLATES[:, : st.K], jnp.float32)
+    jobs = jnp.asarray(trace.JOB_TEMPLATES[:, : st.K], jnp.float32)
+    # instances drawn from templates with +-20% jitter
+    t_idx = jax.random.randint(k_c, (st.R,), 0, machines.shape[0])
+    c = machines[t_idx] * jax.random.uniform(
+        k_cj, (st.R, st.K), minval=0.8, maxval=1.2
+    )
+    c = jnp.maximum(c, 1.0)
+    # job types cycle through templates with jitter, scaled by contention
+    j_idx = jnp.arange(st.L) % jobs.shape[0]
+    a = jobs[j_idx] * jax.random.uniform(
+        k_aj, (st.L, st.K), minval=0.9, maxval=1.1
+    )
+    a = jnp.maximum(a, 0.25) * contention / 10.0
+    # adjacency: random with guaranteed coverage (same repair rule as the
+    # host path, branch-free: a uniform index per row/column, applied only
+    # where the row/column came out empty)
+    compat_any = ((a[:, None, :] > 0) & (c[None, :, :] > 0)).any(-1)
+    mask = (
+        jax.random.uniform(k_mask, (st.L, st.R)) < st.density
+    ) & compat_any
+    row_fix = jax.nn.one_hot(
+        jax.random.randint(k_row, (st.L,), 0, st.R), st.R, dtype=jnp.bool_
+    )  # (L, R)
+    mask = mask | (~mask.any(axis=1, keepdims=True) & row_fix)
+    col_fix = jax.nn.one_hot(
+        jax.random.randint(k_col, (st.R,), 0, st.L), st.L, dtype=jnp.bool_
+    ).T  # (L, R): col_fix[l, r] = 1 iff l is column r's repair row
+    mask = mask | (~mask.any(axis=0, keepdims=True) & col_fix)
+    alpha = jax.random.uniform(
+        k_alpha, (st.R, st.K),
+        minval=st.alpha_range[0], maxval=st.alpha_range[1],
+    )
+    return ClusterSpec(
+        mask=mask.astype(jnp.float32),
+        a=a.astype(jnp.float32),
+        c=c.astype(jnp.float32),
+        alpha=alpha.astype(jnp.float32),
+        beta=beta.astype(jnp.float32),
+        kinds=kinds.astype(jnp.int32),
+    )
+
+
+def _build_arrivals(key, rho, st: DeviceStatics) -> jax.Array:
+    """Device twin of trace.build_arrivals: (T, L) Bernoulli indicators
+    with diurnal modulation and BURST_LEN-slot burst windows."""
+    k_phase, k_start, k_draw = jax.random.split(key, 3)
+    base = jnp.full((st.T, st.L), rho, jnp.float32)
+    if st.diurnal:
+        t = jnp.arange(st.T, dtype=jnp.float32)[:, None]
+        phase = jax.random.uniform(
+            k_phase, (1, st.L), minval=0.0, maxval=2.0 * jnp.pi
+        )
+        base = base * (0.75 + 0.25 * jnp.sin(2.0 * jnp.pi * t / 288.0 + phase))
+    # burst[t] = any start in (t - BURST_LEN, t]: cumulative-sum window,
+    # identical formulation to the (pinned) vectorised host path
+    starts = jax.random.uniform(k_start, (st.T, st.L)) < st.burst_prob
+    cum = jnp.cumsum(starts.astype(jnp.int32), axis=0)
+    shifted = jnp.pad(cum, ((trace.BURST_LEN, 0), (0, 0)))[: st.T]
+    burst = (cum - shifted) > 0
+    p = jnp.clip(jnp.where(burst, 0.95, base), 0.0, 1.0)
+    x = jax.random.uniform(k_draw, (st.T, st.L)) < p
+    return x.astype(jnp.float32)
+
+
+def _build_works(key, st: DeviceStatics) -> jax.Array:
+    """Device twin of trace.build_works: (T, L) Lomax/Pareto-II job sizes,
+    mean ``work_mean``, tail index ``work_tail`` (inverse-CDF sampling:
+    Pareto(tail) = u^(-1/tail) - 1, u ~ U(0, 1))."""
+    scale = st.work_mean * (st.work_tail - 1.0) / st.work_tail
+    u = jax.random.uniform(
+        key, (st.T, st.L), minval=jnp.finfo(jnp.float32).tiny, maxval=1.0
+    )
+    pareto = u ** (-1.0 / st.work_tail) - 1.0
+    return (scale * (1.0 + pareto)).astype(jnp.float32)
+
+
+@lru_cache(maxsize=None)
+def _generator(st: DeviceStatics):
+    """The compiled grid generator for one static-shape signature."""
+
+    def one(seed, rho, contention, kinds, beta):
+        spec = _build_spec(
+            stream_key(seed, "spec"), contention, kinds, beta, st
+        )
+        arrivals = _build_arrivals(stream_key(seed, "arrivals"), rho, st)
+        works = (
+            _build_works(stream_key(seed, "works"), st)
+            if st.with_works else None
+        )
+        return spec, arrivals, works
+
+    return jax.jit(jax.vmap(one))
+
+
+def make_batch(cfgs, with_works: bool = False):
+    """Device-resident ``trace.make_batch``: (spec, arrivals[, works]) with
+    every leaf carrying a leading (G,) axis, generated in one jitted vmapped
+    dispatch.
+
+    All configs must share (L, R, K, T) *and* the distributional statics
+    (density, jitter ranges, burst probability, work distribution) — the
+    per-point axes are seed, rho, contention, and utility, exactly the axes
+    ``sweep.make_grid`` varies. Utility kinds and beta are deterministic
+    per-point vectors, computed on host (trace.spec_kinds / trace.spec_beta)
+    and handed to the device program as stacked operands.
+    """
+    cfgs = trace.check_batch_cfgs(cfgs)
+    statics = {DeviceStatics.from_cfg(c, with_works) for c in cfgs}
+    if len(statics) > 1:
+        raise ValueError(
+            "device trace batches must share all static trace parameters "
+            f"(density, jitter ranges, burst/work distribution); got {statics}"
+        )
+    st = statics.pop()
+    bad = [c.seed for c in cfgs if not 0 <= int(c.seed) < 2 ** 32]
+    if bad:
+        raise ValueError(
+            "device trace synthesis derives its streams from uint32 PRNG "
+            f"keys: seeds must lie in [0, 2**32), got {bad[:3]}"
+            f"{'...' if len(bad) > 3 else ''}. Remap the seed axis, or use "
+            "trace_backend='host' (SeedSequence accepts arbitrary "
+            "non-negative ints)."
+        )
+    seeds = jnp.asarray([c.seed for c in cfgs], jnp.uint32)
+    rhos = jnp.asarray([c.rho for c in cfgs], jnp.float32)
+    contentions = jnp.asarray([c.contention for c in cfgs], jnp.float32)
+    kinds = jnp.asarray(
+        np.stack([trace.spec_kinds(c) for c in cfgs]), jnp.int32
+    )
+    beta = jnp.asarray(
+        np.stack([trace.spec_beta(c) for c in cfgs]), jnp.float32
+    )
+    spec, arrivals, works = _generator(st)(
+        seeds, rhos, contentions, kinds, beta
+    )
+    return spec, arrivals, works

@@ -82,7 +82,13 @@ class Engine:
         act = [s for s in range(self.slots) if self.active[s] is not None]
         if not act:
             return 0
-        toks = jnp.asarray(self.pending[:, None])
+        # Snapshot the fed tokens with an explicit copy: self.pending is
+        # mutated a few lines down, and handing jax a VIEW of it races the
+        # asynchronously-dispatched transfer under load — the in-flight
+        # decode could read the NEXT step's tokens (observed as
+        # nondeterministic garbage decodes whenever the CPU was busy;
+        # self.pos is already snapshotted by its astype copy).
+        toks = jnp.asarray(np.array(self.pending[:, None], copy=True))
         pos = jnp.asarray(self.pos.astype(np.int32))
         logits, self.cache = self._step(self.cache, toks, pos)
         self.steps_run += 1

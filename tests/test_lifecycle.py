@@ -175,3 +175,28 @@ def test_residual_capacity_floors_at_zero():
     assert (np.asarray(res) >= 0.0).all()
     spec_res = graph.residual_spec(spec, jnp.zeros((spec.L, spec.R, spec.K)))
     np.testing.assert_array_equal(np.asarray(spec_res.c), np.asarray(spec.c))
+
+
+def test_run_rejects_mismatched_works_shape():
+    """Device-batch plumbing guard: works must pair 1:1 with arrivals —
+    a transposed or truncated works tensor fails loudly at trace time
+    instead of silently mis-sizing jobs."""
+    cfg = _cfg()
+    spec, arr, works = trace.make_lifecycle(cfg)
+    with pytest.raises(ValueError, match="works"):
+        lifecycle.run(spec, arr, works[:-1], "fairness")
+
+
+def test_run_consumes_device_synthesized_works():
+    """A device-generated (spec, arrivals, works) row runs the lifecycle
+    end to end with finite metrics — works plumbed straight from the
+    trace_device batch, no host round-trip."""
+    cfg = trace.TraceConfig(T=T, L=L, R=R, K=K, seed=1)
+    spec_b, arr_b, works_b = trace.make_batch(
+        [cfg], with_works=True, trace_backend="device"
+    )
+    spec_row = jax.tree.map(lambda l: l[0], spec_b)
+    tr = lifecycle.run(spec_row, arr_b[0], works_b[0], "ogasched")
+    summ = lifecycle.summarize(tr, spec_row)
+    assert summ["completed"] > 0
+    assert np.isfinite(summ["jct_mean"])

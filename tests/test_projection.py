@@ -108,6 +108,92 @@ def test_sorted_cluster_matches_exact_property(seed):
     np.testing.assert_allclose(got, want, atol=1e-6 * max(1.0, np.abs(z).max()))
 
 
+@given(st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_sortscan_rows_match_exact_property(seed):
+    """The one-sort + prefix-sum path == exact numpy oracle to 1e-6 on
+    random rows, including masked lanes (narrow-to-mid L here — one jit
+    compile per example shape; the production wide-lane regime past the
+    dispatch threshold is covered by
+    test_sortscan_wide_lanes_match_exact)."""
+    rng = np.random.default_rng(seed)
+    N = int(rng.integers(1, 12))
+    L = int(rng.integers(1, 80))
+    z = rng.normal(0, 5, (N, L)).astype(np.float32)
+    a = rng.uniform(0.0, 4.0, (N, L)).astype(np.float32)
+    mask = (rng.random((N, L)) < rng.uniform(0.1, 1.0)).astype(np.float32)
+    c = rng.uniform(0.0, 8.0, N).astype(np.float32)
+    got = np.asarray(proj.project_rows_sortscan(
+        jnp.asarray(z), jnp.asarray(a), jnp.asarray(mask), jnp.asarray(c)
+    ))
+    np.testing.assert_allclose(got, _rows_oracle(z, a, mask, c), atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_sortscan_wide_lanes_match_exact(seed):
+    """Direct oracle parity in the regime the sort path actually owns in
+    production (L >= SORTSCAN_MIN_L): a float32 prefix-sum mis-selection
+    that only manifests at large 2L would surface here, not in the
+    narrow-L property run. One fixed shape per L, so the jit cache is
+    reused across seeds."""
+    rng = np.random.default_rng(100 + seed)
+    for L in (proj.SORTSCAN_MIN_L, proj.SORTSCAN_MIN_L + 37):
+        N = 8
+        z = rng.normal(0, 5, (N, L)).astype(np.float32)
+        a = rng.uniform(0.0, 4.0, (N, L)).astype(np.float32)
+        mask = (rng.random((N, L)) < 0.8).astype(np.float32)
+        c = rng.uniform(0.0, 8.0, N).astype(np.float32)
+        # the dispatcher must route these rows to the sort path
+        got = np.asarray(proj.project_rows_sorted(
+            jnp.asarray(z), jnp.asarray(a), jnp.asarray(mask),
+            jnp.asarray(c),
+        ))
+        np.testing.assert_allclose(
+            got, _rows_oracle(z, a, mask, c), atol=1e-6,
+            err_msg=f"L={L} seed={seed}",
+        )
+
+
+def test_sortscan_equals_allpairs_across_dispatch_boundary():
+    """Both breakpoint evaluations are exact, so they must agree to fp
+    tolerance on either side of SORTSCAN_MIN_L — the dispatcher can never
+    change results, only speed."""
+    rng = np.random.default_rng(0)
+    for L in (4, proj.SORTSCAN_MIN_L - 1, proj.SORTSCAN_MIN_L,
+              proj.SORTSCAN_MIN_L + 33):
+        z = jnp.asarray(rng.normal(0, 5, (16, L)).astype(np.float32))
+        a = jnp.asarray(rng.uniform(0.05, 4.0, (16, L)).astype(np.float32))
+        m = jnp.asarray((rng.random((16, L)) < 0.8).astype(np.float32))
+        c = jnp.asarray(rng.uniform(0.1, 8.0, 16).astype(np.float32))
+        ap = np.asarray(proj.project_rows_allpairs(z, a, m, c))
+        ss = np.asarray(proj.project_rows_sortscan(z, a, m, c))
+        np.testing.assert_allclose(ss, ap, atol=2e-6, err_msg=f"L={L}")
+        disp = np.asarray(proj.project_rows_sorted(z, a, m, c))
+        want = ss if L >= proj.SORTSCAN_MIN_L else ap
+        np.testing.assert_array_equal(disp, want, err_msg=f"dispatch L={L}")
+
+
+def test_sortscan_edge_cases():
+    """The sort path honours the same boundary behaviour as all-pairs:
+    empty rows, zero capacity, ties, and tau exactly on a breakpoint."""
+    a = jnp.ones((1, 3))
+    ones = jnp.ones((1, 3))
+    f = proj.project_rows_sortscan
+    out = f(jnp.asarray([[5.0, -2.0, 3.0]]), a, jnp.zeros((1, 3)),
+            jnp.asarray([2.0]))
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((1, 3)))
+    out = f(jnp.asarray([[3.0, 2.0, 1.0]]), a, ones, jnp.asarray([0.0]))
+    np.testing.assert_allclose(np.asarray(out), np.zeros((1, 3)), atol=1e-6)
+    out = f(jnp.asarray([[9.0, 9.0, 9.0]]), a, ones, jnp.asarray([3.0]))
+    np.testing.assert_array_equal(np.asarray(out), np.ones((1, 3)))
+    out = f(jnp.asarray([[2.0, 2.0, 2.0]]), a, ones, jnp.asarray([1.5]))
+    np.testing.assert_allclose(np.asarray(out), np.full((1, 3), 0.5),
+                               atol=1e-6)
+    out = f(jnp.asarray([[2.0, 1.0]]), jnp.ones((1, 2)), jnp.ones((1, 2)),
+            jnp.asarray([1.0]))
+    np.testing.assert_allclose(np.asarray(out), [[1.0, 0.0]], atol=1e-6)
+
+
 def test_sorted_edge_cases():
     """Empty-port cells, zero capacity, all-at-cap, duplicate breakpoints,
     and tau landing exactly on a breakpoint."""

@@ -164,12 +164,30 @@ def test_engine_matches_forward_greedy():
     eng.run()
     assert r1.done and r2.done
     assert len(r1.out) == 4 and len(r2.out) == 4
-    # greedy reference via full forward re-scoring
+    # Greedy reference via full forward re-scoring. This test was the
+    # suite's load-sensitive flake; the root cause was a race in
+    # Engine.step (it handed jax a VIEW of the mutable ``pending`` buffer,
+    # then mutated it while the async dispatch could still be reading —
+    # under CPU load the decode consumed the NEXT step's tokens; fixed by
+    # snapshotting). The assertion is kept in its robust form anyway: the
+    # engine's cached decode and this uncached forward are different XLA
+    # programs whose logits agree only to fp32 rounding, so the greedy
+    # contract is that every emitted token's *reference* logit sits within
+    # fp tolerance of the reference argmax (teacher-forcing the engine
+    # token so a single near-tie cannot cascade) — token-exact equality
+    # would re-flake on any legitimately near-tied top-2.
     seq = list(prompt)
-    for _ in range(4):
-        logits = M.forward(params, cfg, {"tokens": jnp.asarray([seq])})
-        seq.append(int(jnp.argmax(logits[0, -1])))
-    assert seq[len(prompt):] == r1.out
+    for step, tok in enumerate(r1.out):
+        logits = np.asarray(
+            M.forward(params, cfg, {"tokens": jnp.asarray([seq])})[0, -1],
+            np.float32,
+        )
+        gap = float(logits.max() - logits[tok])
+        assert gap <= 1e-4, (
+            f"step {step}: engine token {tok} is {gap:.2e} below the "
+            f"reference argmax {int(logits.argmax())} — beyond fp noise"
+        )
+        seq.append(tok)
 
 
 def test_engine_continuous_batching_refills():

@@ -1,6 +1,7 @@
 """Streaming sweep driver == one-shot resident run_grid, on grids that do
 NOT divide evenly by the chunk size (the padded final chunk must be invisible
 in the results), for slot and lifecycle modes."""
+import jax
 import numpy as np
 import pytest
 
@@ -93,3 +94,93 @@ def test_grid_memory_bytes_model():
     life = sweep.grid_memory_bytes(BASE, 100, mode="lifecycle")
     assert life["outputs"] > 50 * m1["outputs"]
     assert m1["total"] == m1["inputs"] + m1["outputs"]
+
+
+def test_grid_memory_bytes_counts_prefetched_chunks():
+    """The pipeline stages up to ``prefetch`` queued chunks' INPUTS plus
+    one more under construction in the worker (outputs don't exist yet),
+    and the default accounting (prefetch=0) is unchanged."""
+    base = sweep.grid_memory_bytes(BASE, 64)
+    assert base["prefetch_buffers"] == 0
+    m = sweep.grid_memory_bytes(BASE, 64, prefetch=2)
+    assert m["prefetch_buffers"] == 3 * m["inputs"]
+    assert m["total"] == m["inputs"] + m["outputs"] + m["prefetch_buffers"]
+    assert m["outputs"] == base["outputs"]
+
+
+# ------------------------------------------------- prefetch + trace backend --
+def test_prefetched_iter_batches_matches_sync():
+    """The background-thread prefetcher is a pure pipeline reorganisation:
+    same chunks, same order, same bits as the synchronous driver."""
+    points = sweep.make_grid(BASE, seeds=(0, 1, 2, 3, 4))
+    sync = list(sweep.iter_batches(points, 2, prefetch=0))
+    pre = list(sweep.iter_batches(points, 2, prefetch=2))
+    assert [(sl.start, sl.stop) for sl, _ in sync] == \
+        [(sl.start, sl.stop) for sl, _ in pre]
+    for (_, bs), (_, bp) in zip(sync, pre):
+        for ls, lp in zip(
+            jax.tree.leaves(bs.spec) + [bs.arrivals],
+            jax.tree.leaves(bp.spec) + [bp.arrivals],
+        ):
+            np.testing.assert_array_equal(np.asarray(ls), np.asarray(lp))
+
+
+def test_prefetch_propagates_worker_errors():
+    """A generation failure inside the worker thread must surface on the
+    consuming side, not hang the queue."""
+    points = sweep.make_grid(BASE, seeds=(0, 1, 2))
+    bad = points[:2] + [sweep.SweepPoint(
+        cfg=sweep.trace.TraceConfig(T=BASE.T, L=BASE.L, R=BASE.R + 1, K=BASE.K)
+    )]
+    with pytest.raises(ValueError, match="share"):
+        list(sweep.iter_batches(bad, 3, prefetch=2))
+
+
+def test_prefetch_survives_early_abandonment():
+    """Breaking out of a streamed loop stops the worker cleanly (no hang,
+    no resource leak observable as a stuck join)."""
+    points = sweep.make_grid(BASE, seeds=range(8))
+    it = sweep.run_grid_stream(points, ("fairness",), chunk_size=2)
+    next(it)
+    it.close()  # GeneratorExit must unwind the prefetcher
+
+
+def test_resolve_trace_backend_rules():
+    assert sweep.resolve_trace_backend("host", 10 ** 6) == "host"
+    assert sweep.resolve_trace_backend("device", 1) == "device"
+    assert sweep.resolve_trace_backend("auto", 8) == "host"
+    assert sweep.resolve_trace_backend(
+        "auto", sweep.DEVICE_TRACE_MIN_POINTS
+    ) == "device"
+    with pytest.raises(ValueError):
+        sweep.resolve_trace_backend("tpu", 8)
+
+
+def test_stream_matches_resident_device_traces():
+    """With the device trace backend forced on both sides, the streamed
+    driver is still a pure reorganisation of the resident grid — chunked
+    device generation is per-config independent, so chunk boundaries can't
+    leak into results."""
+    points = sweep.make_grid(BASE, seeds=(0, 1, 2, 3, 4))  # chunk 2 pads
+    batch = sweep.build_batch(points, trace_backend="device")
+    resident = sweep.run_grid(batch, ("ogasched", "fairness"))
+    streamed = sweep.sweep_stream(
+        points, ("ogasched", "fairness"), chunk_size=2,
+        trace_backend="device",
+    )
+    full = sweep.summarize(resident)
+    assert set(streamed) == set(full)
+    for k in full:
+        np.testing.assert_allclose(streamed[k], full[k], err_msg=k)
+
+
+def test_device_lifecycle_stream_runs_and_summarizes():
+    """Lifecycle mode consumes device-synthesized works end to end."""
+    points = sweep.make_grid(BASE, seeds=(0, 1, 2))
+    out = sweep.sweep_stream(
+        points, ("ogasched", "fairness"), chunk_size=2, mode="lifecycle",
+        trace_backend="device",
+    )
+    assert out["completed/ogasched"].shape == (3,)
+    assert np.isfinite(out["utilization/ogasched"]).all()
+    assert (out["completed/ogasched"] > 0).any()

@@ -1,7 +1,9 @@
 """Trace generation: vectorised burst windows pinned against the original
 Python loop, work sampling, RNG-stream independence, batched generation,
-and the run_all oracle-gating regression."""
+bitwise-stability pins for the host golden path, and the run_all
+oracle-gating regression."""
 import dataclasses
+import hashlib
 
 import jax
 import numpy as np
@@ -95,6 +97,55 @@ def test_trace_golden_pins():
     np.testing.assert_allclose(
         np.asarray(works[0]), GOLD["works0"], rtol=1e-6
     )
+
+
+# SHA-256 (first 16 hex chars) of the raw little-endian bytes of
+# (stacked spec leaves, arrivals, works) per config, recorded from the host
+# generator BEFORE the device trace backend and the vectorised coverage
+# repair landed. The host path is the bitwise-pinned golden reference for
+# every other backend: ANY bit change here is a breaking change to
+# recorded experiments and must be deliberate.
+BITWISE_GOLD = {
+    ("mixed", 0): ("a1598eded4d084de", "5588a7ba1e9cfefa", "c84d4e0c37c0fecb"),
+    ("log", 3): ("243899e490c19c65", "8f3f7e9425ce9b7e", "ce4e662280c0ffdf"),
+    ("mixed", 7): ("7622c7bec11bfe33", "32656ddf729af2cc", "b5e86e9a26fc7683"),
+}
+
+
+def _sha16(*arrays) -> str:
+    h = hashlib.sha256()
+    for a in arrays:
+        h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+    return h.hexdigest()[:16]
+
+
+@pytest.mark.parametrize(
+    "cfg",
+    [
+        trace.TraceConfig(T=64, L=4, R=8, K=4, seed=0),
+        trace.TraceConfig(T=100, L=6, R=16, K=4, seed=3, rho=0.4,
+                          contention=14.0, utility="log"),
+        # sparse density exercises the coverage-repair draws
+        trace.TraceConfig(T=80, L=10, R=12, K=6, seed=7, density=0.12,
+                          burst_prob=0.1),
+    ],
+    ids=["base", "log-contended", "sparse-bursty"],
+)
+def test_host_traces_bitwise_pinned(cfg):
+    """The host golden path is bitwise-stable: spec, arrivals, and works
+    hash to the values recorded before trace_backend="device" existed —
+    proving the device path and the vectorised coverage-repair rewrite
+    changed no host bits."""
+    spec, arr, works = trace.make_lifecycle(cfg)
+    want = BITWISE_GOLD[(cfg.utility, cfg.seed)]
+    got = (_sha16(*jax.tree.leaves(spec)), _sha16(arr), _sha16(works))
+    assert got == want, f"host trace bits changed: {got} != {want}"
+    # make_batch(trace_backend="host") must be exactly the stacked goldens
+    spec_b, arr_b, works_b = trace.make_batch(
+        [cfg], with_works=True, trace_backend="host"
+    )
+    assert _sha16(*jax.tree.leaves(spec_b)) == want[0]
+    assert (_sha16(arr_b[0]), _sha16(works_b[0])) == want[1:]
 
 
 def test_build_works_seeded_heavy_tailed():

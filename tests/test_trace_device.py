@@ -1,0 +1,240 @@
+"""Device-resident trace synthesis (sched.trace_device): statistical parity
+with the host numpy path, per-(seed, stream) independence, determinism,
+batching semantics, and the coverage-repair guarantees."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sched import trace, trace_device
+
+SEEDS = (0, 1, 2)
+
+
+def _device_batch(cfgs, with_works=False):
+    return trace.make_batch(cfgs, with_works=with_works,
+                            trace_backend="device")
+
+
+# ------------------------------------------------------- statistical parity --
+def test_arrival_rate_parity():
+    """Mean arrival rate of the device process tracks the host process per
+    seed (same rho, diurnal modulation, burst boosting)."""
+    for seed in SEEDS:
+        cfg = trace.TraceConfig(T=3000, L=8, R=8, K=4, seed=seed, rho=0.6)
+        host = float(np.asarray(trace.build_arrivals(cfg)).mean())
+        (_, dev_arr, _) = _device_batch([cfg])
+        dev = float(np.asarray(dev_arr[0]).mean())
+        assert dev == pytest.approx(host, abs=0.03), (seed, host, dev)
+
+
+def test_burst_window_statistics_parity():
+    """With rho=0 and no diurnal floor, arrivals exist ONLY inside burst
+    windows, so the arrival process directly exposes the burst structure:
+    overall coverage (window frequency x length) and the conditional
+    P(arrival at t+k | arrival at t) — high inside the BURST_LEN window,
+    near-zero beyond it — must match the host process per seed."""
+
+    def stats(arr):
+        arr = np.asarray(arr, bool)
+        cover = arr.mean()
+        inside = []
+        for k in (5, 2 * trace.BURST_LEN):
+            joint = (arr[:-k] & arr[k:]).mean()
+            inside.append(joint / max(arr.mean(), 1e-9))
+        return cover, inside[0], inside[1]
+
+    for seed in SEEDS:
+        cfg = trace.TraceConfig(
+            T=4000, L=8, R=8, K=4, seed=seed,
+            rho=0.0, diurnal=False, burst_prob=0.01,
+        )
+        h_cover, h_near, h_far = stats(trace.build_arrivals(cfg))
+        (_, dev_arr, _) = _device_batch([cfg])
+        d_cover, d_near, d_far = stats(dev_arr[0])
+        assert d_cover == pytest.approx(h_cover, rel=0.25), seed
+        # lag-5 stays inside a 20-slot window most of the time ...
+        assert d_near == pytest.approx(h_near, abs=0.1)
+        assert d_near > 0.5
+        # ... lag-40 has left it (only window-start clustering remains)
+        assert d_far == pytest.approx(h_far, abs=0.1)
+        assert d_far < 0.35
+
+
+def test_works_lomax_parity():
+    """Device job sizes are Lomax with the host path's mean and tail:
+    mean and the {50, 90, 99} quantiles agree over >= 3 seeds."""
+    host_all, dev_all = [], []
+    for seed in SEEDS:
+        cfg = trace.TraceConfig(T=4000, L=10, R=8, K=4, seed=seed)
+        host_all.append(np.asarray(trace.build_works(cfg)).ravel())
+        (_, _, works) = _device_batch([cfg], with_works=True)
+        dev_all.append(np.asarray(works[0]).ravel())
+    host = np.concatenate(host_all)
+    dev = np.concatenate(dev_all)
+    assert dev.min() > 0
+    assert dev.mean() == pytest.approx(host.mean(), rel=0.1)
+    for q in (50, 90, 99):
+        assert np.percentile(dev, q) == pytest.approx(
+            np.percentile(host, q), rel=0.1
+        ), q
+    # the tail produces elephants on both paths
+    assert dev.max() > 4 * cfg.work_mean
+
+
+def test_spec_distribution_parity():
+    """Device specs draw from the same templates and jitter ranges: per-
+    column capacity/request means track the host path, alpha stays in
+    range, and kinds/beta are the deterministic host values."""
+    cfgs = [
+        trace.TraceConfig(T=8, L=10, R=64, K=6, seed=s, utility="log")
+        for s in range(6)
+    ]
+    spec_d, _, _ = _device_batch(cfgs)
+    host = [trace.build_spec(c) for c in cfgs]
+    c_h = np.mean([np.asarray(s.c) for s in host], axis=(0, 1))
+    c_d = np.asarray(spec_d.c).mean(axis=(0, 1))
+    np.testing.assert_allclose(c_d, c_h, rtol=0.25)
+    a_h = np.mean([np.asarray(s.a) for s in host], axis=(0, 1))
+    a_d = np.asarray(spec_d.a).mean(axis=(0, 1))
+    np.testing.assert_allclose(a_d, a_h, rtol=0.1)
+    alpha = np.asarray(spec_d.alpha)
+    assert alpha.min() >= cfgs[0].alpha_range[0]
+    assert alpha.max() <= cfgs[0].alpha_range[1]
+    for g, cfg in enumerate(cfgs):
+        np.testing.assert_array_equal(
+            np.asarray(spec_d.kinds[g]), trace.spec_kinds(cfg)
+        )
+        np.testing.assert_allclose(
+            np.asarray(spec_d.beta[g]), trace.spec_beta(cfg), rtol=1e-6
+        )
+
+
+def test_mask_density_and_coverage():
+    """Adjacency density tracks cfg.density, and the vectorised coverage
+    repair guarantees every port and every instance stays reachable even
+    at sparse densities."""
+    cfgs = [
+        trace.TraceConfig(T=8, L=12, R=16, K=4, seed=s, density=0.08)
+        for s in range(8)
+    ]
+    spec_d, _, _ = _device_batch(cfgs)
+    m = np.asarray(spec_d.mask)
+    assert set(np.unique(m)) <= {0.0, 1.0}
+    assert m.any(axis=2).all(), "uncovered port row"
+    assert m.any(axis=1).all(), "uncovered instance column"
+    dense = [
+        trace.TraceConfig(T=8, L=12, R=16, K=4, seed=s, density=0.6)
+        for s in range(8)
+    ]
+    md = np.asarray(_device_batch(dense)[0].mask)
+    assert 0.4 < md.mean() < 0.8  # compat-thinned Bernoulli(0.6)
+    assert m.mean() < md.mean()
+
+
+# ----------------------------------------------------- stream independence --
+def test_stream_keys_independent_across_seed_stream_pairs():
+    """Mirror of the host-path SeedSequence test: every (seed, stream) pair
+    must own its own randomness — including the historical seed-offset
+    collision pattern (seed s arrivals == seed s+1 spec)."""
+    draws = {}
+    for seed in (0, 1, 2, 3):
+        for stream in trace.STREAMS:
+            key = trace_device.stream_key(seed, stream)
+            draws[(seed, stream)] = np.asarray(
+                jax.random.uniform(key, (64,))
+            )
+    keys = list(draws)
+    for i, k1 in enumerate(keys):
+        for k2 in keys[i + 1:]:
+            assert not np.array_equal(draws[k1], draws[k2]), (k1, k2)
+
+
+def test_components_resample_independently():
+    """Arrivals must not change when only work sampling changes, and spec
+    / arrivals / works of one seed are pairwise uncorrelated streams."""
+    cfg = trace.TraceConfig(T=200, L=6, R=8, K=4, seed=5)
+    _, arr1, _ = _device_batch([cfg])
+    _, arr2, works = _device_batch([cfg], with_works=True)
+    np.testing.assert_array_equal(np.asarray(arr1), np.asarray(arr2))
+    assert works is not None
+
+
+# ----------------------------------------------------------- batching/API --
+def test_device_batch_deterministic_and_seed_sensitive():
+    cfgs = [trace.TraceConfig(T=50, L=6, R=8, K=4, seed=s) for s in (3, 4)]
+    b1 = _device_batch(cfgs, with_works=True)
+    b2 = _device_batch(cfgs, with_works=True)
+    for l1, l2 in zip(jax.tree.leaves(b1), jax.tree.leaves(b2)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    # different seeds -> different rows
+    assert not np.array_equal(np.asarray(b1[1][0]), np.asarray(b1[1][1]))
+
+
+def test_device_batch_equals_chunked_generation():
+    """vmapped generation is per-config independent: generating a grid in
+    one batch equals generating it chunk by chunk, bitwise — the invariant
+    the streaming driver's chunking rests on."""
+    cfgs = [trace.TraceConfig(T=40, L=5, R=8, K=4, seed=s) for s in range(5)]
+    full = _device_batch(cfgs, with_works=True)
+    for start in (0, 2, 4):
+        part = _device_batch(cfgs[start:start + 2], with_works=True)
+        for lf, lp in zip(jax.tree.leaves(full), jax.tree.leaves(part)):
+            np.testing.assert_array_equal(
+                np.asarray(lf)[start:start + 2], np.asarray(lp)
+            )
+
+
+def test_device_batch_shapes_and_works_gating():
+    cfgs = [trace.TraceConfig(T=30, L=4, R=8, K=4, seed=s) for s in range(3)]
+    spec, arr, works = _device_batch(cfgs)
+    assert works is None
+    assert arr.shape == (3, 30, 4)
+    assert spec.c.shape == (3, 8, 4)
+    assert spec.mask.shape == (3, 4, 8)
+    _, _, works = _device_batch(cfgs, with_works=True)
+    assert works.shape == (3, 30, 4)
+
+
+def test_device_batch_rejects_mixed_statics():
+    cfgs = [trace.TraceConfig(T=30, L=4, R=8, K=4, seed=0)]
+    with pytest.raises(ValueError):
+        trace_device.make_batch(
+            cfgs + [dataclasses.replace(cfgs[0], density=0.9)]
+        )
+    with pytest.raises(ValueError):
+        trace_device.make_batch(
+            cfgs + [dataclasses.replace(cfgs[0], T=31)]
+        )
+    with pytest.raises(ValueError):
+        trace_device.make_batch([])
+    # per-point axes (seed, rho, contention, utility) are allowed
+    mixed = cfgs + [dataclasses.replace(
+        cfgs[0], seed=1, rho=0.3, contention=20.0, utility="log"
+    )]
+    spec, arr, _ = trace_device.make_batch(mixed)
+    assert arr.shape == (2, 30, 4)
+    assert not np.array_equal(
+        np.asarray(spec.kinds[0]), np.asarray(spec.kinds[1])
+    )
+
+
+def test_device_batch_rejects_out_of_range_seeds():
+    """The device path keys streams off uint32 PRNG keys; seeds the host
+    path would accept (SeedSequence takes arbitrary non-negative ints) must
+    fail loudly with the contract, not a raw uint32 OverflowError from
+    inside the prefetch worker."""
+    base = trace.TraceConfig(T=10, L=4, R=8, K=4)
+    for seed in (2 ** 32 + 5, -1):
+        with pytest.raises(ValueError, match="2\\*\\*32"):
+            trace_device.make_batch(
+                [dataclasses.replace(base, seed=seed)]
+            )
+
+
+def test_make_batch_rejects_unknown_backend():
+    cfgs = [trace.TraceConfig(T=10, L=4, R=8, K=4)]
+    with pytest.raises(ValueError):
+        trace.make_batch(cfgs, trace_backend="gpu")

@@ -25,6 +25,8 @@ quantifies all of it).
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import time
 
 import jax
@@ -154,6 +156,46 @@ def _bench_trace_gen(records, chunk: int = CHUNK, reps: int = 5):
          f"device_vs_host={ratio:.2f}")
 
 
+def _bench_resume(records, G: int = 64, chunk: int = 16):
+    """Cost of crash-safety: streamed sweep with per-chunk checkpointing vs
+    without, plus the payoff — resuming after losing the newest half of the
+    chunk checkpoints recomputes only the missing chunks."""
+    pts = _points(G)
+    n_chunks = G // chunk
+
+    def _run(ckpt_dir=None):
+        t0 = time.time()
+        sweep.sweep_stream(
+            pts, ALGOS, chunk_size=chunk, checkpoint_dir=ckpt_dir,
+        )
+        return time.time() - t0
+
+    _run()  # warm this chunk shape
+    t_plain = _run()
+    with tempfile.TemporaryDirectory() as d:
+        t_ckpt = _run(d)
+        # preemption: the newest half of the chunk checkpoints is lost
+        for s in range(n_chunks // 2, n_chunks):
+            for suffix in (".npz", ".json"):
+                os.remove(os.path.join(d, f"step_{s:08d}{suffix}"))
+        t_resume = _run(d)
+    overhead_pct = 100.0 * (t_ckpt - t_plain) / max(t_plain, 1e-9)
+    speedup = t_ckpt / max(t_resume, 1e-9)
+    records.append({
+        "name": "sweep.resume", "mode": "slot", "G": G, "chunk_size": chunk,
+        "streamed_s": round(t_plain, 4),
+        "checkpointed_s": round(t_ckpt, 4),
+        "checkpoint_overhead_pct": round(overhead_pct, 2),
+        "resumed_half_s": round(t_resume, 4),
+        "resume_speedup": round(speedup, 2),
+    })
+    emit(
+        f"sweep.resume.slot.G={G}.chunk={chunk}", t_ckpt * 1e6 / G,
+        f"checkpoint_overhead_pct={overhead_pct:.2f};"
+        f"resume_speedup={speedup:.2f}",
+    )
+
+
 def run(quick: bool = True) -> list[dict]:
     records: list[dict] = []
 
@@ -227,6 +269,9 @@ def run(quick: bool = True) -> list[dict]:
         for _ in range(reps)
     ) / reps
     _record("resident", "slot", 64, 0, t_ref, records, backend="reference")
+
+    # crash-safety cost + resume payoff (BENCH_sweep.json "sweep.resume")
+    _bench_resume(records)
 
     # lifecycle: outputs are ~R*K/1 larger per config; stream a modest grid
     G_life = 32 if quick else 256

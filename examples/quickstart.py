@@ -42,6 +42,26 @@ for p, avg, imp in zip(points, summary["avg/ogasched"],
 #   points = sweep.make_grid(cfg, seeds=range(10_000))
 #   summary = sweep.sweep_stream(points, chunk_size=256, sharded=True)
 
+# --- resumable sweep: a streamed grid that survives kill -9 ---------------
+# (docs/sweeps.md "Resumable sweeps". checkpoint_dir commits each chunk's
+# summary crash-safely; rerunning the same call resumes from the finished
+# prefix — here the second call recomputes nothing and returns identical
+# summaries. The store refuses a different grid: SweepResumeMismatch.)
+import tempfile
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    first = sweep.sweep_stream(
+        points, algorithms=("ogasched", "fairness"), chunk_size=2,
+        checkpoint_dir=ckpt_dir,
+    )
+    resumed = sweep.sweep_stream(       # pure load: all chunks checkpointed
+        points, algorithms=("ogasched", "fairness"), chunk_size=2,
+        checkpoint_dir=ckpt_dir,
+    )
+assert all((resumed[k] == first[k]).all() for k in first)
+print(f"\nresumable sweep: {len(points)} configs checkpointed + resumed "
+      "bitwise-equal")
+
 # --- job lifecycle: jobs hold resources, depart, and report JCT -----------
 # (docs/lifecycle.md; mode="lifecycle" nets capacities by held allocations.)
 import dataclasses

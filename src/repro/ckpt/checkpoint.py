@@ -1,9 +1,15 @@
 """Atomic pytree checkpoints: npz payload + msgpack-free manifest.
 
-Write path: serialize to ``<dir>/tmp.<step>`` then os.replace -> atomic on
-POSIX; a JSON manifest carries the tree structure, dtypes, step and a
-content checksum so a torn/corrupt file is detected (node failure mid-write)
-and skipped by the manager's restore scan.
+Write protocol (crash-ordered): serialize the payload to
+``<dir>/.tmp.<step>.npz``, fsync, ``os.replace`` into place, fsync the
+directory — only THEN write and publish the JSON manifest the same way.
+The manifest is the commit record: it carries the tree structure, dtypes,
+step and a content checksum, and because it is published strictly after
+the payload is durable, every crash window leaves a state
+``verify_checkpoint`` classifies as "not written" (payload without
+manifest, or a stale same-step manifest whose checksum no longer matches)
+rather than a checkpoint that looks committed but isn't. Orphaned
+``.tmp.*`` files from a crash mid-write are swept by the manager on init.
 
 Restore is *sharding-aware*: leaves are loaded host-side and device_put with
 the target sharding, so a checkpoint written on mesh A restores onto mesh B
@@ -29,8 +35,36 @@ def _flatten_with_names(tree: Any):
     return names, leaves, treedef
 
 
-def save_checkpoint(path: str, tree: Any, step: int) -> str:
-    """Atomically write ``tree`` to ``path`` (a directory)."""
+def _fsync_dir(path: str) -> None:
+    """Make a rename durable: fsync the containing directory (POSIX)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # platforms without directory fds
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _publish(tmp: str, final: str, directory: str) -> None:
+    os.replace(tmp, final)
+    _fsync_dir(directory)
+
+
+def save_checkpoint(
+    path: str, tree: Any, step: int, extra: Optional[dict] = None
+) -> str:
+    """Atomically write ``tree`` to ``path`` (a directory).
+
+    The payload is made durable (fsync + atomic rename + directory fsync)
+    BEFORE its manifest is written and published the same way — the
+    manifest publish is the commit point, so a crash anywhere in between
+    leaves at worst a payload that ``verify_checkpoint`` rejects, never a
+    manifest vouching for bytes that may not be on disk. ``extra`` merges
+    caller metadata into the manifest (reserved keys win); the sweep
+    checkpoint store uses it to record its summary-metric names.
+    """
     os.makedirs(path, exist_ok=True)
     names, leaves, _ = _flatten_with_names(tree)
     arrays = [np.asarray(jax.device_get(l)) for l in leaves]
@@ -39,29 +73,53 @@ def save_checkpoint(path: str, tree: Any, step: int) -> str:
     final_npz = os.path.join(path, f"step_{step:08d}.npz")
     with open(tmp_npz, "wb") as f:
         np.savez(f, **payload)
+        f.flush()
+        os.fsync(f.fileno())
     digest = hashlib.sha256(open(tmp_npz, "rb").read()).hexdigest()
-    manifest = {
-        "step": step,
-        "names": names,
-        "dtypes": [str(a.dtype) for a in arrays],
-        "shapes": [list(a.shape) for a in arrays],
-        "sha256": digest,
-    }
+    _publish(tmp_npz, final_npz, path)
+    manifest = dict(extra or {})
+    manifest.update(
+        step=step,
+        names=names,
+        dtypes=[str(a.dtype) for a in arrays],
+        shapes=[list(a.shape) for a in arrays],
+        sha256=digest,
+    )
     tmp_man = os.path.join(path, f".tmp.{step}.json")
     with open(tmp_man, "w") as f:
         json.dump(manifest, f)
-    os.replace(tmp_npz, final_npz)
-    os.replace(tmp_man, os.path.join(path, f"step_{step:08d}.json"))
+        f.flush()
+        os.fsync(f.fileno())
+    _publish(tmp_man, os.path.join(path, f"step_{step:08d}.json"), path)
     return final_npz
 
 
-def verify_checkpoint(path: str, step: int) -> bool:
+def read_manifest(path: str, step: int) -> Optional[dict]:
+    """The step's manifest dict, or None if absent/unparseable."""
     man_p = os.path.join(path, f"step_{step:08d}.json")
+    try:
+        with open(man_p) as f:
+            man = json.load(f)
+        return man if isinstance(man, dict) else None
+    except (OSError, ValueError):
+        return None
+
+
+def verify_checkpoint(path: str, step: int) -> bool:
+    """Whether the (manifest, payload) pair commits this step.
+
+    Any torn state — missing file, unparseable or wrong-step manifest
+    (a stale same-step manifest left by a crash between the two
+    publishes), checksum mismatch — means the checkpoint was never
+    durably written and must be treated exactly like an absent one.
+    """
+    man = read_manifest(path, step)
     npz_p = os.path.join(path, f"step_{step:08d}.npz")
-    if not (os.path.exists(man_p) and os.path.exists(npz_p)):
+    if man is None or not os.path.exists(npz_p):
         return False
     try:
-        man = json.load(open(man_p))
+        if man.get("step") != step or not isinstance(man.get("sha256"), str):
+            return False
         digest = hashlib.sha256(open(npz_p, "rb").read()).hexdigest()
         return digest == man["sha256"]
     except Exception:
@@ -98,11 +156,23 @@ def load_checkpoint(
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def load_checkpoint_arrays(path: str, step: int) -> list[np.ndarray]:
+    """The step's payload as host arrays in manifest order, no ``like``
+    tree needed — the restore path for flat stores (sweep chunk summaries)
+    whose structure lives in the manifest, not a live pytree."""
+    npz_p = os.path.join(path, f"step_{step:08d}.npz")
+    data = np.load(npz_p)
+    return [data[f"arr_{i}"] for i in range(len(data.files))]
+
+
 def available_steps(path: str) -> list[int]:
     if not os.path.isdir(path):
         return []
     steps = []
     for f in os.listdir(path):
         if f.startswith("step_") and f.endswith(".npz"):
-            steps.append(int(f[5:13]))
+            try:
+                steps.append(int(f[5:13]))
+            except ValueError:
+                continue
     return sorted(steps)

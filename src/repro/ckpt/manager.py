@@ -1,4 +1,19 @@
-"""Checkpoint manager: rotation, corruption-tolerant auto-resume."""
+"""Checkpoint manager: rotation, corruption-tolerant auto-resume.
+
+Crash-safety invariants:
+
+* Rotation counts **valid** checkpoints only — a burst of torn newest
+  writes (crash-looping node) can never evict the last checkpoint that
+  actually restores.
+* Torn step files older than the newest valid checkpoint are garbage
+  (``latest_valid_step`` would never pick them over it) and are removed
+  during rotation; a torn step *newer* than every valid one is left alone
+  — it is indistinguishable from a write in flight.
+* Orphaned ``.tmp.*`` staging files (leaked by a crash mid-
+  ``save_checkpoint``) are swept on manager init.
+* ``keep=None`` disables rotation entirely — the sweep checkpoint store
+  needs every chunk retained.
+"""
 from __future__ import annotations
 
 import os
@@ -8,30 +23,53 @@ from repro.ckpt import checkpoint as C
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, every: int = 50):
+    def __init__(
+        self, directory: str, keep: Optional[int] = 3, every: int = 50
+    ):
         self.dir = directory
         self.keep = keep
         self.every = every
         os.makedirs(directory, exist_ok=True)
+        self._sweep_orphans()
+
+    def _sweep_orphans(self) -> None:
+        """Remove ``.tmp.*`` staging files a crashed writer left behind."""
+        for f in os.listdir(self.dir):
+            if f.startswith(".tmp."):
+                try:
+                    os.remove(os.path.join(self.dir, f))
+                except OSError:
+                    pass
 
     def maybe_save(self, step: int, tree: Any) -> Optional[str]:
         if step % self.every != 0:
             return None
         return self.save(step, tree)
 
-    def save(self, step: int, tree: Any) -> str:
-        p = C.save_checkpoint(self.dir, tree, step)
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+        p = C.save_checkpoint(self.dir, tree, step, extra=extra)
         self._rotate()
         return p
 
+    def _remove_step(self, step: int) -> None:
+        for suffix in (".npz", ".json"):
+            try:
+                os.remove(os.path.join(self.dir, f"step_{step:08d}{suffix}"))
+            except OSError:
+                pass
+
     def _rotate(self):
+        if self.keep is None:
+            return
         steps = C.available_steps(self.dir)
-        for s in steps[: -self.keep]:
-            for suffix in (".npz", ".json"):
-                try:
-                    os.remove(os.path.join(self.dir, f"step_{s:08d}{suffix}"))
-                except OSError:
-                    pass
+        valid = [s for s in steps if C.verify_checkpoint(self.dir, s)]
+        drop = set(valid[: -self.keep] if self.keep else valid)
+        if valid:
+            # torn writes below the newest valid checkpoint can never be
+            # restored over it — reclaim them instead of leaking forever
+            drop |= {s for s in steps if s not in set(valid) and s < valid[-1]}
+        for s in drop:
+            self._remove_step(s)
 
     def latest_valid_step(self) -> Optional[int]:
         """Newest checkpoint that passes the manifest checksum — torn writes

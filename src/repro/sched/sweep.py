@@ -33,6 +33,16 @@ Layers:
                             grids synthesize traces on-device by default
                             (``trace_backend="auto"``), so the stream is
                             compute-bound, not trace-bound.
+  * ``SweepCheckpoint`` / ``sweep_fingerprint``
+                          — crash-safe resume for the streaming driver:
+                            completed chunks' reduced summaries are persisted
+                            through ckpt.CheckpointManager under a manifest
+                            keyed by the grid/chunking/trace-backend
+                            fingerprint, so a killed sweep restarted with
+                            ``sweep_stream(checkpoint_dir=...)`` verifies it
+                            is the SAME sweep, skips finished chunks, and
+                            re-enters the prefetch pipeline at the first
+                            incomplete chunk.
   * ``summarize`` / ``summarize_lifecycle``
                           — per-config reductions (signed-safe improvement
                             percentages; jitted lifecycle.summarize_batch).
@@ -49,7 +59,10 @@ must go through the streaming driver (``grid_memory_bytes`` quantifies both).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
+import json
+import os
 import queue as queue_mod
 import threading
 import time
@@ -62,6 +75,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
+from repro.ckpt import checkpoint as ckpt_io
+from repro.ckpt.manager import CheckpointManager
 from repro.core import baselines, ogasched
 from repro.core.graph import ClusterSpec
 from repro.kernels import ops
@@ -454,6 +469,158 @@ def run_grid_sharded(
 
 
 # --------------------------------------------------------------------------
+# Resumable sweeps: per-chunk summary checkpoints + a fingerprinted manifest.
+# The chunk is the unit of progress — each completed chunk's reduced outputs
+# are committed through the crash-hardened ckpt layer, so a SIGKILLed sweep
+# restarts from its first incomplete chunk instead of from zero.
+# --------------------------------------------------------------------------
+
+class SweepResumeMismatch(ValueError):
+    """A checkpoint directory belongs to a *different* sweep: its manifest
+    fingerprint does not match the (grid, chunking, trace-backend, run
+    parameters) being resumed. Resuming would silently splice summaries of
+    unrelated configurations — refuse instead."""
+
+
+def sweep_fingerprint(
+    points: Sequence[SweepPoint],
+    algorithms: Sequence[str] = ALGORITHMS,
+    *,
+    chunk_size: int,
+    mode: str = "slot",
+    trace_backend: str = "auto",
+    backend: str = "auto",
+    queue_depth: int = 8,
+    rate_floor: float = 1e-3,
+) -> str:
+    """SHA-256 over everything that determines a streamed sweep's summaries.
+
+    Covers every point's full TraceConfig + hyperparameters (order matters:
+    chunk index -> grid rows), the algorithm list, chunking, mode, the
+    RESOLVED trace backend (so ``"auto"`` and the concrete backend it
+    resolves to fingerprint identically), and the run parameters that reach
+    the kernels. Execution layout — ``sharded``, ``prefetch``, ``donate``
+    — is deliberately excluded: those are bitwise-pure reorganisations
+    (pinned by tests/test_sweep_sharded.py, test_sweep_stream.py), so a
+    sweep checkpointed on one host may resume on a different device count.
+    """
+    h = hashlib.sha256()
+    header = {
+        "algorithms": list(algorithms),
+        "chunk_size": int(chunk_size),
+        "mode": mode,
+        "trace_backend": resolve_trace_backend(trace_backend, len(points)),
+        "backend": backend,
+        "queue_depth": int(queue_depth),
+        "rate_floor": float(rate_floor),
+        "n_points": len(points),
+    }
+    h.update(json.dumps(header, sort_keys=True).encode())
+    for p in points:
+        row = dataclasses.asdict(p.cfg)
+        row["eta0"] = float(p.eta0)
+        row["decay"] = float(p.decay)
+        h.update(json.dumps(row, sort_keys=True, default=float).encode())
+    return h.hexdigest()
+
+
+class SweepCheckpoint:
+    """Crash-safe store for a streamed sweep's per-chunk summaries.
+
+    Layout: ``<dir>/sweep_manifest.json`` binds the directory to ONE sweep
+    (its ``sweep_fingerprint`` plus human-readable provenance), published
+    atomically; chunk ``i``'s reduced summary is checkpoint step ``i``
+    through :class:`repro.ckpt.manager.CheckpointManager` (``keep=None`` —
+    every chunk is retained; manager init sweeps ``.tmp.*`` orphans from a
+    killed writer). Summary dicts are stored as arrays sorted by metric
+    name, with the names in the step manifest (``metrics``), so restore
+    needs no live pytree.
+
+    Progress is the **contiguous valid prefix** of chunk checkpoints: the
+    driver commits chunks in order, so the first missing-or-torn step is
+    exactly where a killed sweep re-enters the prefetch pipeline. A torn
+    final write (SIGKILL mid-commit) therefore costs one chunk, never the
+    sweep.
+    """
+
+    MANIFEST = "sweep_manifest.json"
+
+    def __init__(
+        self,
+        directory: str,
+        points: Sequence[SweepPoint],
+        algorithms: Sequence[str] = ALGORITHMS,
+        *,
+        chunk_size: int = 64,
+        mode: str = "slot",
+        trace_backend: str = "auto",
+        backend: str = "auto",
+        queue_depth: int = 8,
+        rate_floor: float = 1e-3,
+    ):
+        self.dir = directory
+        self.chunk_size = int(chunk_size)
+        self.num_chunks = -(-len(points) // self.chunk_size)
+        self.fingerprint = sweep_fingerprint(
+            points, algorithms, chunk_size=chunk_size, mode=mode,
+            trace_backend=trace_backend, backend=backend,
+            queue_depth=queue_depth, rate_floor=rate_floor,
+        )
+        self.manager = CheckpointManager(directory, keep=None, every=1)
+        man_path = os.path.join(directory, self.MANIFEST)
+        if os.path.exists(man_path):
+            with open(man_path) as f:
+                have = json.load(f)
+            if have.get("fingerprint") != self.fingerprint:
+                raise SweepResumeMismatch(
+                    f"checkpoint directory {directory!r} belongs to a "
+                    "different sweep (grid/chunking/trace-backend/run-"
+                    "parameter fingerprint mismatch); point it at a fresh "
+                    "directory or rebuild the same grid"
+                )
+        else:
+            manifest = {
+                "fingerprint": self.fingerprint,
+                "n_points": len(points),
+                "chunk_size": self.chunk_size,
+                "num_chunks": self.num_chunks,
+                "mode": mode,
+                "algorithms": list(algorithms),
+            }
+            tmp = man_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(manifest, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, man_path)
+
+    def completed_chunks(self) -> int:
+        """Chunks durably finished: the contiguous valid prefix length."""
+        n = 0
+        while n < self.num_chunks and ckpt_io.verify_checkpoint(self.dir, n):
+            n += 1
+        return n
+
+    def commit(self, chunk_index: int, summary: dict) -> None:
+        """Durably record chunk ``chunk_index``'s reduced summary."""
+        keys = sorted(summary)
+        self.manager.save(
+            chunk_index,
+            [np.asarray(summary[k]) for k in keys],
+            extra={"metrics": keys},
+        )
+
+    def load_summaries(self) -> list[dict[str, np.ndarray]]:
+        """Finished chunks' summaries, in chunk order (the valid prefix)."""
+        out = []
+        for i in range(self.completed_chunks()):
+            man = ckpt_io.read_manifest(self.dir, i)
+            arrays = ckpt_io.load_checkpoint_arrays(self.dir, i)
+            out.append(dict(zip(man["metrics"], arrays)))
+        return out
+
+
+# --------------------------------------------------------------------------
 # Streaming grids: generate -> run -> reduce, one chunk at a time. A chunk is
 # the only resident (g, T, ...) tensor set; 10k-config grids stream through
 # in O(chunk_size) memory. The last partial chunk is padded to chunk_size so
@@ -465,9 +632,10 @@ def _chunk_batches(
     chunk_size: int,
     mode: str,
     trace_backend: str,
+    start_chunk: int = 0,
 ) -> Iterator[tuple[slice, SweepBatch]]:
     """Synchronous chunk generation — the prefetch worker's body."""
-    for start in range(0, len(points), chunk_size):
+    for start in range(start_chunk * chunk_size, len(points), chunk_size):
         chunk = list(points[start:start + chunk_size])
         batch = build_batch(chunk, mode=mode, trace_backend=trace_backend)
         pad = chunk_size - len(chunk)
@@ -552,6 +720,7 @@ def iter_batches(
     mode: str = "slot",
     trace_backend: str = "host",
     prefetch: int = 2,
+    start_chunk: int = 0,
 ) -> Iterator[tuple[slice, SweepBatch]]:
     """Yield ``(grid_slice, batch)`` chunks of a point list.
 
@@ -569,11 +738,18 @@ def iter_batches(
     way. ``trace_backend`` is resolved against the FULL grid size (not the
     chunk), so "auto" picks the device path exactly when the grid is large
     enough for generation cost to matter.
+
+    ``start_chunk`` skips that many leading chunks entirely — no trace is
+    generated for them and the prefetch pipeline fills starting at the
+    first emitted chunk. This is how a resumed sweep re-enters the stream
+    at its first incomplete chunk.
     """
     if chunk_size < 1:
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    if start_chunk < 0:
+        raise ValueError(f"start_chunk must be >= 0, got {start_chunk}")
     backend = resolve_trace_backend(trace_backend, len(points))
-    it = _chunk_batches(points, chunk_size, mode, backend)
+    it = _chunk_batches(points, chunk_size, mode, backend, start_chunk)
     if prefetch > 0:
         it = _prefetched(it, prefetch)
     yield from it
@@ -593,6 +769,7 @@ def run_grid_stream(
     rate_floor: float = 1e-3,
     donate: bool = False,
     stats: Optional[dict] = None,
+    checkpoint: Optional[SweepCheckpoint] = None,
 ) -> Iterator[tuple[slice, SweepBatch, dict]]:
     """Stream a grid chunk by chunk: yields ``(grid_slice, batch, outputs)``.
 
@@ -625,7 +802,31 @@ def run_grid_stream(
     the background worker failed to hide). Benchmarks derive their
     ``overlap_ratio`` from it against the production driver itself rather
     than a re-implementation.
+
+    ``checkpoint`` (a :class:`SweepCheckpoint` built for THIS grid and
+    these run parameters — fingerprints are compared, mismatch raises
+    :class:`SweepResumeMismatch`) makes the stream resumable: chunks the
+    store already holds are skipped — never generated, never yielded —
+    and the prefetch pipeline fills from the first incomplete chunk. The
+    driver does not commit: the caller owns the reduction, so after
+    consuming a yielded chunk it calls
+    ``checkpoint.commit(sl.start // chunk_size, reduced)`` with whatever
+    it accumulates (``sweep_stream`` does exactly this with its summary
+    dicts). Composes with ``sharded``, ``donate``, and ``prefetch``.
     """
+    start_chunk = 0
+    if checkpoint is not None:
+        fp = sweep_fingerprint(
+            points, algorithms, chunk_size=chunk_size, mode=mode,
+            trace_backend=trace_backend, backend=backend,
+            queue_depth=queue_depth, rate_floor=rate_floor,
+        )
+        if fp != checkpoint.fingerprint:
+            raise SweepResumeMismatch(
+                "run_grid_stream arguments do not match the sweep this "
+                "checkpoint store was built for"
+            )
+        start_chunk = checkpoint.completed_chunks()
     donate = (
         donate and not sharded and jax.default_backend() != "cpu"
         and _donation_applies(algorithms, mode)
@@ -635,6 +836,7 @@ def run_grid_stream(
     it = iter_batches(
         points, chunk_size, mode=mode,
         trace_backend=trace_backend, prefetch=prefetch,
+        start_chunk=start_chunk,
     )
     while True:
         t_wait = time.monotonic()
@@ -679,6 +881,7 @@ def sweep_stream(
     prefetch: int = 2,
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
+    checkpoint_dir: Optional[str] = None,
 ) -> dict[str, np.ndarray]:
     """Full-grid per-config summaries via the streaming driver.
 
@@ -691,20 +894,46 @@ def sweep_stream(
     (``prefetch``, default double-buffered) and ``trace_backend="auto"``
     moves trace synthesis on-device for large grids — see
     ``run_grid_stream``.
+
+    ``checkpoint_dir`` makes the sweep **preemption-tolerant**: every
+    completed chunk's summary is committed to a :class:`SweepCheckpoint`
+    store there (cadence = one commit per chunk — the summaries are
+    (chunk_size,)-sized rows, so commits cost microseconds against chunk
+    compute), and a rerun with the same arguments loads the finished
+    prefix from disk and computes only the remaining chunks. The store is
+    fingerprint-bound: pointing it at a different grid/chunking/run
+    raises :class:`SweepResumeMismatch`. Resumed summaries are
+    bitwise-identical to an uninterrupted run (the store round-trips the
+    float arrays exactly; tests/test_sweep_resume.py SIGKILLs a live
+    sweep to prove it).
     """
+    ckpt = None
     parts: dict[str, list[np.ndarray]] = {}
-    for _, batch, out in run_grid_stream(
+    if checkpoint_dir is not None:
+        ckpt = SweepCheckpoint(
+            checkpoint_dir, points, algorithms, chunk_size=chunk_size,
+            mode=mode, trace_backend=trace_backend, backend=backend,
+            queue_depth=queue_depth, rate_floor=rate_floor,
+        )
+        for summ in ckpt.load_summaries():
+            for k, v in summ.items():
+                parts.setdefault(k, []).append(v)
+    for sl, batch, out in run_grid_stream(
         points, algorithms, chunk_size=chunk_size, mode=mode,
         sharded=sharded, backend=backend, trace_backend=trace_backend,
         prefetch=prefetch,
         queue_depth=queue_depth, rate_floor=rate_floor, donate=True,
+        checkpoint=ckpt,
     ):
         summ = (
             summarize_lifecycle(out, batch) if mode == "lifecycle"
             else summarize(out)
         )
+        summ = {k: np.asarray(v) for k, v in summ.items()}
+        if ckpt is not None:
+            ckpt.commit(sl.start // chunk_size, summ)
         for k, v in summ.items():
-            parts.setdefault(k, []).append(np.asarray(v))
+            parts.setdefault(k, []).append(v)
     return {k: np.concatenate(v) for k, v in parts.items()}
 
 

@@ -1,0 +1,218 @@
+"""Checkpoint layer: atomic save/restore, torn-write classification,
+valid-only rotation, orphan sweep, and manager cadence.
+
+The crash model: ``save_checkpoint`` publishes the payload durably FIRST
+and the manifest strictly after — so every interruption point (simulated
+here by truncating files, deleting halves of the pair, or aborting between
+the two ``os.replace`` calls) must leave a state ``verify_checkpoint``
+classifies as "not written", and ``latest_valid_step`` must fall back to
+the newest checkpoint that actually restores.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.ckpt import checkpoint as C
+
+
+def _tree(v: float):
+    return {"w": jnp.full((3, 2), v), "opt": {"m": jnp.arange(4.0)}}
+
+
+def _paths(d, step):
+    return (
+        os.path.join(d, f"step_{step:08d}.npz"),
+        os.path.join(d, f"step_{step:08d}.json"),
+    )
+
+
+# ----------------------------------------------------------- round trip ---
+def test_roundtrip_preserves_tree_and_dtypes(tmp_path):
+    d = str(tmp_path)
+    tree = {
+        "f32": jnp.ones((2, 3), jnp.float32),
+        "i32": jnp.arange(5, dtype=jnp.int32),
+        "nested": {"b": jnp.zeros(1, jnp.bool_)},
+    }
+    C.save_checkpoint(d, tree, 3)
+    assert C.verify_checkpoint(d, 3)
+    out = C.load_checkpoint(d, 3, tree)
+    for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sharding_aware_restore_places_leaves(tmp_path):
+    """Restore with an explicit shardings tree device_puts each leaf with
+    its target sharding (the elastic mesh-migration path)."""
+    d = str(tmp_path)
+    tree = _tree(2.0)
+    C.save_checkpoint(d, tree, 1)
+    sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    shardings = jax.tree.map(lambda _: sh, tree)
+    out = C.load_checkpoint(d, 1, tree, shardings)
+    for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        assert got.sharding == sh
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_load_checkpoint_arrays_flat_restore(tmp_path):
+    """The like-free restore returns host arrays in manifest order, and
+    ``extra`` metadata survives in the manifest — the sweep-resume path."""
+    d = str(tmp_path)
+    arrays = [np.arange(6.0).reshape(2, 3), np.ones(4, np.int64)]
+    C.save_checkpoint(d, arrays, 0, extra={"metrics": ["a", "b"]})
+    man = C.read_manifest(d, 0)
+    assert man["metrics"] == ["a", "b"]
+    assert man["step"] == 0  # reserved keys win over extra
+    out = C.load_checkpoint_arrays(d, 0)
+    assert len(out) == 2
+    for got, want in zip(out, arrays):
+        np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------------- torn writes ---
+def test_torn_payload_detected(tmp_path):
+    d = str(tmp_path)
+    C.save_checkpoint(d, _tree(1.0), 5)
+    npz, _ = _paths(d, 5)
+    with open(npz, "r+b") as f:  # truncate mid-payload
+        f.truncate(os.path.getsize(npz) // 2)
+    assert not C.verify_checkpoint(d, 5)
+
+
+def test_crash_between_payload_and_manifest_publish(tmp_path):
+    """Abort save between the two os.replace calls: a NEW payload next to
+    the OLD same-step manifest. That stale manifest must NOT vouch for the
+    new bytes — the step reads as not-written and restore falls back."""
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep=3, every=1)
+    mgr.save(1, _tree(1.0))
+    mgr.save(2, _tree(2.0))
+
+    calls = []
+    real_replace = os.replace
+
+    def crashing_replace(src, dst):
+        real_replace(src, dst)
+        calls.append(dst)
+        if dst.endswith(".npz"):  # payload published; die before manifest
+            raise KeyboardInterrupt("simulated SIGKILL")
+
+    os.replace = crashing_replace
+    try:
+        with pytest.raises(KeyboardInterrupt):
+            C.save_checkpoint(d, _tree(99.0), 2)  # overwrite step 2
+    finally:
+        os.replace = real_replace
+
+    # new payload + stale step-2 manifest: checksum mismatch -> not written
+    assert not C.verify_checkpoint(d, 2)
+    mgr2 = CheckpointManager(d, keep=3, every=1)
+    assert mgr2.latest_valid_step() == 1
+    _, out = mgr2.restore(_tree(0.0))
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0)
+
+
+def test_crash_before_payload_publish_keeps_old_pair(tmp_path):
+    """Abort before the payload replace: the previous checkpoint at the
+    same step is untouched and still valid (and the .tmp orphan is swept
+    by the next manager init)."""
+    d = str(tmp_path)
+    C.save_checkpoint(d, _tree(7.0), 4)
+    real_replace = os.replace
+
+    def crashing_replace(src, dst):
+        raise KeyboardInterrupt("simulated SIGKILL before publish")
+
+    os.replace = crashing_replace
+    try:
+        with pytest.raises(KeyboardInterrupt):
+            C.save_checkpoint(d, _tree(8.0), 4)
+    finally:
+        os.replace = real_replace
+
+    assert C.verify_checkpoint(d, 4)
+    out = C.load_checkpoint(d, 4, _tree(0.0))
+    np.testing.assert_allclose(np.asarray(out["w"]), 7.0)
+    assert any(f.startswith(".tmp.") for f in os.listdir(d))
+    CheckpointManager(d, keep=3, every=1)  # init sweeps orphans
+    assert not any(f.startswith(".tmp.") for f in os.listdir(d))
+    assert C.verify_checkpoint(d, 4)  # sweep never touches committed pairs
+
+
+def test_manifest_without_payload_and_garbage_manifest(tmp_path):
+    d = str(tmp_path)
+    C.save_checkpoint(d, _tree(1.0), 9)
+    npz, man = _paths(d, 9)
+    os.remove(npz)
+    assert not C.verify_checkpoint(d, 9)
+    # garbage manifest next to a fresh payload
+    C.save_checkpoint(d, _tree(1.0), 9)
+    with open(man, "w") as f:
+        f.write("{not json")
+    assert not C.verify_checkpoint(d, 9)
+    # wrong-step manifest (copied/renamed by hand) is stale by definition
+    C.save_checkpoint(d, _tree(1.0), 9)
+    m = json.load(open(man))
+    m["step"] = 8
+    json.dump(m, open(man, "w"))
+    assert not C.verify_checkpoint(d, 9)
+
+
+# -------------------------------------------------------------- rotation ---
+def test_rotate_keeps_newest_valid_not_newest_torn(tmp_path):
+    """Regression (ISSUE 6): N torn newest writes + 1 older valid must not
+    evict the valid one — rotation counts valid checkpoints only."""
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep=2, every=1)
+    mgr.save(10, _tree(10.0))
+    # a burst of torn newer writes: payloads without manifests
+    for s in (11, 12, 13):
+        mgr.save(s, _tree(float(s)))
+        os.remove(_paths(d, s)[1])
+    mgr.save(14, _tree(14.0))
+    os.remove(_paths(d, 14)[1])
+    assert mgr.latest_valid_step() == 10
+    _, out = mgr.restore(_tree(0.0))
+    np.testing.assert_allclose(np.asarray(out["w"]), 10.0)
+
+
+def test_rotate_reclaims_torn_steps_below_newest_valid(tmp_path):
+    d = str(tmp_path)
+    mgr = CheckpointManager(d, keep=2, every=1)
+    mgr.save(1, _tree(1.0))
+    os.remove(_paths(d, 1)[1])  # torn old step
+    mgr.save(2, _tree(2.0))
+    mgr.save(3, _tree(3.0))
+    # step 1 is torn AND below the newest valid -> reclaimed by rotation
+    assert not os.path.exists(_paths(d, 1)[0])
+    assert C.available_steps(d) == [2, 3]
+
+
+def test_rotate_valid_only_basic(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, every=1)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(float(s)))
+    assert C.available_steps(str(tmp_path)) == [3, 4]
+    assert mgr.latest_valid_step() == 4
+
+
+def test_keep_none_retains_everything(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=None, every=1)
+    for s in range(6):
+        mgr.save(s, _tree(float(s)))
+    assert C.available_steps(str(tmp_path)) == list(range(6))
+
+
+# --------------------------------------------------------------- cadence ---
+def test_maybe_save_cadence(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=None, every=3)
+    saved = [s for s in range(1, 10) if mgr.maybe_save(s, _tree(float(s)))]
+    assert saved == [3, 6, 9]
+    assert C.available_steps(str(tmp_path)) == [3, 6, 9]

@@ -1,0 +1,278 @@
+"""Resumable streamed sweeps: fingerprint binding, chunk-skip resume, and
+the kill -9 contract.
+
+The integration half SIGKILLs a live sharded+streamed+checkpointed sweep
+in a subprocess (8 host devices, the same pattern as
+tests/test_sweep_sharded.py), resumes it in a second subprocess, and
+requires the resumed summaries to be BITWISE equal to an uninterrupted
+run — with the already-finished chunks' checkpoint payloads untouched by
+the resume (proof they were loaded, not recomputed).
+"""
+import hashlib
+import os
+import pathlib
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as C
+from repro.sched import sweep, trace
+
+BASE = trace.TraceConfig(T=40, L=6, R=16, K=4)
+ALGOS = ("ogasched", "fairness")
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _points(n=5):
+    return sweep.make_grid(BASE, seeds=range(n))
+
+
+def _count_build_batch(monkeypatch):
+    calls = []
+    real = sweep.build_batch
+
+    def counting(points, *a, **kw):
+        calls.append(len(points))
+        return real(points, *a, **kw)
+
+    monkeypatch.setattr(sweep, "build_batch", counting)
+    return calls
+
+
+# ------------------------------------------------------------ fingerprint ---
+def test_fingerprint_binds_grid_and_run_parameters():
+    pts = _points(4)
+    fp = sweep.sweep_fingerprint(pts, ALGOS, chunk_size=2)
+    assert fp == sweep.sweep_fingerprint(pts, ALGOS, chunk_size=2)
+    # every determinant of the summaries changes the fingerprint
+    assert fp != sweep.sweep_fingerprint(pts[:3], ALGOS, chunk_size=2)
+    assert fp != sweep.sweep_fingerprint(pts, ALGOS, chunk_size=4)
+    assert fp != sweep.sweep_fingerprint(pts, ("ogasched",), chunk_size=2)
+    assert fp != sweep.sweep_fingerprint(
+        pts, ALGOS, chunk_size=2, mode="lifecycle"
+    )
+    assert fp != sweep.sweep_fingerprint(
+        pts, ALGOS, chunk_size=2, backend="reference"
+    )
+    other = sweep.make_grid(BASE, eta0s=(10.0,), seeds=range(4))
+    assert fp != sweep.sweep_fingerprint(other, ALGOS, chunk_size=2)
+    # "auto" fingerprints as the backend it resolves to (host, small grid)
+    assert fp == sweep.sweep_fingerprint(
+        pts, ALGOS, chunk_size=2, trace_backend="host"
+    )
+    assert fp != sweep.sweep_fingerprint(
+        pts, ALGOS, chunk_size=2, trace_backend="device"
+    )
+
+
+def test_mismatched_store_refuses_resume(tmp_path):
+    d = str(tmp_path)
+    sweep.SweepCheckpoint(d, _points(4), ALGOS, chunk_size=2)
+    with pytest.raises(sweep.SweepResumeMismatch):
+        sweep.SweepCheckpoint(d, _points(6), ALGOS, chunk_size=2)
+    with pytest.raises(sweep.SweepResumeMismatch):
+        sweep.SweepCheckpoint(d, _points(4), ALGOS, chunk_size=4)
+    # and the stream driver cross-checks the store against its own args
+    ck = sweep.SweepCheckpoint(d, _points(4), ALGOS, chunk_size=2)
+    with pytest.raises(sweep.SweepResumeMismatch):
+        next(sweep.run_grid_stream(
+            _points(4), ("ogasched",), chunk_size=2, checkpoint=ck,
+        ))
+
+
+# ----------------------------------------------------------------- resume ---
+def test_resume_computes_only_missing_chunks(tmp_path, monkeypatch):
+    """Kill a checkpointed sweep after 2 of 3 chunks; the rerun must
+    generate traces for ONLY the missing chunk and reproduce the
+    uninterrupted summaries bitwise."""
+    d = str(tmp_path)
+    pts = _points(5)  # chunks: [0,1], [2,3], [4] (padded)
+    ref = sweep.sweep_stream(pts, ALGOS, chunk_size=2)
+
+    ck = sweep.SweepCheckpoint(d, pts, ALGOS, chunk_size=2)
+    it = sweep.run_grid_stream(
+        pts, ALGOS, chunk_size=2, prefetch=0, checkpoint=ck,
+    )
+    for i, (sl, _, out) in enumerate(it):
+        ck.commit(
+            sl.start // 2, {k: np.asarray(v) for k, v in
+                            sweep.summarize(out).items()}
+        )
+        if i == 1:
+            break  # "crash" with chunk 2 unwritten
+    it.close()
+    assert ck.completed_chunks() == 2
+
+    calls = _count_build_batch(monkeypatch)
+    got = sweep.sweep_stream(
+        pts, ALGOS, chunk_size=2, prefetch=0, checkpoint_dir=d,
+    )
+    assert calls == [1]  # only the final 1-point chunk was generated
+    assert set(got) == set(ref)
+    for k in ref:
+        np.testing.assert_array_equal(got[k], ref[k], err_msg=k)
+
+
+def test_fully_checkpointed_sweep_is_pure_load(tmp_path, monkeypatch):
+    d = str(tmp_path)
+    pts = _points(4)
+    ref = sweep.sweep_stream(pts, ALGOS, chunk_size=2, checkpoint_dir=d)
+    calls = _count_build_batch(monkeypatch)
+    got = sweep.sweep_stream(pts, ALGOS, chunk_size=2, checkpoint_dir=d)
+    assert calls == []  # no trace generation at all
+    for k in ref:
+        np.testing.assert_array_equal(got[k], ref[k], err_msg=k)
+
+
+def test_torn_final_chunk_costs_exactly_one_chunk(tmp_path, monkeypatch):
+    """A SIGKILL mid-commit leaves a torn newest chunk: the contiguous
+    valid prefix stops before it, and resume recomputes just that chunk."""
+    d = str(tmp_path)
+    pts = _points(6)  # 3 full chunks
+    ref = sweep.sweep_stream(pts, ALGOS, chunk_size=2, checkpoint_dir=d)
+    npz = os.path.join(d, "step_00000002.npz")
+    with open(npz, "r+b") as f:  # tear the last chunk's payload
+        f.truncate(os.path.getsize(npz) // 2)
+    ck = sweep.SweepCheckpoint(d, pts, ALGOS, chunk_size=2)
+    assert ck.completed_chunks() == 2
+    calls = _count_build_batch(monkeypatch)
+    got = sweep.sweep_stream(
+        pts, ALGOS, chunk_size=2, prefetch=0, checkpoint_dir=d,
+    )
+    assert calls == [2]  # one 2-point chunk regenerated
+    for k in ref:
+        np.testing.assert_array_equal(got[k], ref[k], err_msg=k)
+
+
+def test_lifecycle_resume_roundtrip(tmp_path):
+    d = str(tmp_path)
+    pts = _points(3)
+    ref = sweep.sweep_stream(pts, ALGOS, chunk_size=2, mode="lifecycle")
+    got = sweep.sweep_stream(
+        pts, ALGOS, chunk_size=2, mode="lifecycle", checkpoint_dir=d,
+    )
+    resumed = sweep.sweep_stream(
+        pts, ALGOS, chunk_size=2, mode="lifecycle", checkpoint_dir=d,
+    )
+    for k in ref:
+        np.testing.assert_array_equal(got[k], ref[k], err_msg=k)
+        np.testing.assert_array_equal(resumed[k], ref[k], err_msg=k)
+
+
+# ------------------------------------------------------------- kill -9 -----
+_KILL_SCRIPT = textwrap.dedent(
+    """
+    import os, sys, time
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax
+    import numpy as np
+    from repro.sched import sweep, trace
+
+    ckpt_dir, out_path, slow = sys.argv[1], sys.argv[2], sys.argv[3] == "slow"
+    assert jax.device_count() == 8
+    BASE = trace.TraceConfig(T=40, L=6, R=16, K=4)
+    points = sweep.make_grid(BASE, seeds=range(48))  # 6 chunks of 8
+
+    if slow:
+        # stretch each chunk so the parent's SIGKILL lands mid-sweep
+        real = sweep.summarize
+        def slow_summarize(out):
+            time.sleep(0.25)
+            return real(out)
+        sweep.summarize = slow_summarize
+
+    summary = sweep.sweep_stream(
+        points, ("ogasched", "fairness"), chunk_size=8, sharded=True,
+        checkpoint_dir=ckpt_dir,
+    )
+    np.savez(out_path, **{k.replace("/", "|"): v for k, v in summary.items()})
+    print("RESUME-SWEEP-DONE")
+    """
+)
+
+NUM_CHUNKS = 6
+
+
+def _spawn(ckpt_dir, out_path, slow):
+    return subprocess.Popen(
+        [sys.executable, "-c", _KILL_SCRIPT, ckpt_dir, out_path,
+         "slow" if slow else "fast"],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+        text=True,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")},
+        cwd=REPO,
+    )
+
+
+def _chunk_shas(d):
+    return {
+        s: hashlib.sha256(
+            open(os.path.join(d, f"step_{s:08d}.npz"), "rb").read()
+        ).hexdigest()
+        for s in C.available_steps(d)
+        if C.verify_checkpoint(d, s)
+    }
+
+
+def test_sigkill_midsweep_resume_bitwise_equal(tmp_path):
+    """SIGKILL a live sharded+streamed+checkpointed sweep, resume it, and
+    require summaries bitwise-equal to an uninterrupted run."""
+    d = str(tmp_path / "ckpt")
+    out = str(tmp_path / "resumed.npz")
+
+    # phase 1: run until >= 2 chunks are durably committed, then kill -9
+    p = _spawn(d, str(tmp_path / "unused.npz"), slow=True)
+    try:
+        deadline = time.time() + 480
+        while time.time() < deadline:
+            done = sum(
+                C.verify_checkpoint(d, s) for s in C.available_steps(d)
+            )
+            if done >= 2 or p.poll() is not None:
+                break
+            time.sleep(0.01)
+        if p.poll() is not None:
+            stdout, stderr = p.communicate()
+            raise AssertionError(
+                "sweep exited before it could be killed:\n" + stdout + stderr
+            )
+        os.kill(p.pid, signal.SIGKILL)
+    finally:
+        p.wait(timeout=60)
+    assert p.returncode == -signal.SIGKILL
+
+    ck = sweep.SweepCheckpoint(
+        d, sweep.make_grid(BASE, seeds=range(48)), ALGOS, chunk_size=8,
+    )
+    survived = ck.completed_chunks()
+    assert 0 < survived < NUM_CHUNKS  # killed mid-sweep, progress durable
+    before = _chunk_shas(d)
+
+    # phase 2: resume in a fresh process; it must complete
+    p2 = _spawn(d, out, slow=False)
+    stdout, stderr = p2.communicate(timeout=540)
+    assert "RESUME-SWEEP-DONE" in stdout, stdout + stderr
+    assert ck.completed_chunks() == NUM_CHUNKS
+
+    # finished chunks were loaded, not recomputed: payload bytes untouched
+    after = _chunk_shas(d)
+    for s in range(survived):
+        assert after[s] == before[s], f"chunk {s} was rewritten on resume"
+
+    # phase 3: uninterrupted reference (host process; sharding and the
+    # stream are bitwise-pure reorganisations, pinned elsewhere)
+    ref = sweep.sweep_stream(
+        sweep.make_grid(BASE, seeds=range(48)), ALGOS, chunk_size=8,
+    )
+    got = np.load(out)
+    assert set(got.files) == {k.replace("/", "|") for k in ref}
+    for k in ref:
+        np.testing.assert_array_equal(
+            got[k.replace("/", "|")], ref[k], err_msg=k
+        )

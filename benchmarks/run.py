@@ -28,6 +28,12 @@ def main() -> None:
         help="where the kernels section writes its machine-readable records "
         "(projection + fused-step timings, incl. the backend step A/B)",
     )
+    ap.add_argument(
+        "--regret-json", type=str, default="BENCH_regret.json",
+        help="where the Thm. 1 section writes its machine-readable records "
+        "(per utility x regime: growth exponent + bootstrap CI, R_T vs "
+        "the H_G sqrt(T) bound)",
+    )
     args, _ = ap.parse_known_args()
     quick = not args.full
 
@@ -59,6 +65,12 @@ def main() -> None:
             json.dump(records, f, indent=2)
         print(f"# wrote {len(records)} kernel records to {args.kernels_json}")
 
+    def regret_section():
+        records = bench_regret.run(quick)
+        with open(args.regret_json, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"# wrote {len(records)} regret records to {args.regret_json}")
+
     sections = [
         ("fig2_reward", lambda: bench_reward.run(T=1000 if quick else 8000)),
         ("tab3_generality", lambda: bench_generality.run(quick)),
@@ -67,7 +79,7 @@ def main() -> None:
         ("fig5_large_scale", lambda: bench_large_scale.run(quick)),
         ("fig6_contention", lambda: bench_contention.run(quick)),
         ("fig7_utilities", lambda: bench_utilities.run(quick)),
-        ("thm1_regret", lambda: bench_regret.run(quick)),
+        ("thm1_regret", regret_section),
         ("sweep_throughput", sweep_section),
         ("lifecycle_jct", lambda: bench_lifecycle.run(quick)),
         ("kernels", kernels_section),

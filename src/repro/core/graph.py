@@ -147,8 +147,10 @@ def make_random_spec(
     )
     beta = jnp.linspace(beta_range[0], beta_range[1], K, dtype=dtype)
     if kinds is None:
+        # cycle the seed families only — keeps randomly-parameterised specs
+        # stable as the utility catalog grows (cf. trace.spec_kinds)
         kinds_arr = jnp.asarray(
-            [i % utilities.NUM_KINDS for i in range(K)], dtype=jnp.int32
+            [i % utilities.NUM_SEED_KINDS for i in range(K)], dtype=jnp.int32
         )
     else:
         kinds_arr = jnp.asarray(kinds, dtype=jnp.int32)

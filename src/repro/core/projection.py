@@ -210,6 +210,48 @@ def project_rows_sorted(
     return project_rows_sortscan(z, a, mask, c)
 
 
+def fill_rows_to_capacity(
+    z: jax.Array, a: jax.Array, mask: jax.Array, c: jax.Array
+) -> jax.Array:
+    """Euclidean projection of each row onto the capacity-SATURATING face
+    {0 <= y <= a, sum(y*m) = min(c, sum(a*m))} — water-filling with a
+    *signed* level: y = clip(z - tau, 0, a), tau in R chosen so the row
+    exactly exhausts its capacity (or every lane caps out when even that
+    cannot reach c).
+
+    This is the feasibility solve of work-conserving size-aware policies
+    (core.baselines.hesrpt_step): the heSRPT ideal point z = theta * c uses
+    all capacity by construction, but per-channel caps a can truncate it —
+    the projection redistributes the capped excess across the uncapped lanes
+    at the same water level, via the SAME exact breakpoint sweep as
+    ``project_rows_sorted``. The signed level reduces to the non-negative
+    one by an offset: shifting z by delta = max(a) saturates every lane's
+    box clamp (clip(z + delta, 0, a) = a*m since z >= 0), so the sweep's
+    tau' = tau + delta >= 0 solve is exact and unshifted y is recovered
+    untouched (clip is shift-equivariant). z, a, mask: (N, L); c: (N,).
+    Masked-out lanes stay structurally zero.
+    """
+    f32 = jnp.promote_types(z.dtype, jnp.float32)
+    delta = jnp.max(a.astype(f32) * mask.astype(f32), axis=-1, keepdims=True)
+    return project_rows_sorted(
+        z.astype(f32) + delta, a, mask, c
+    ).astype(z.dtype)
+
+
+def fill_to_capacity(
+    z: jax.Array, a: jax.Array, c: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Cluster-level ``fill_rows_to_capacity``: same (L, R, K) packing and
+    signature convention as ``project_sorted`` (a (L, K), c (R, K),
+    mask (L, R) — the mask may already encode per-slot job activity)."""
+    L, R, K = z.shape
+    rows = lambda t: t.transpose(1, 2, 0).reshape(R * K, L)
+    a_rows = jnp.broadcast_to(a.T[None], (R, K, L)).reshape(R * K, L)
+    m_rows = jnp.broadcast_to(mask.T[:, None], (R, K, L)).reshape(R * K, L)
+    out = fill_rows_to_capacity(rows(z), a_rows, m_rows, c.reshape(-1))
+    return out.reshape(R, K, L).transpose(2, 0, 1)
+
+
 def project_sorted(
     z: jax.Array, a: jax.Array, c: jax.Array, mask: jax.Array
 ) -> jax.Array:

@@ -2,6 +2,14 @@
 
 All are zero-startup (f(0)=0), non-decreasing, concave on R_{>=0}, and
 continuously differentiable with f'(0) <= varpi_r^k  (Def. 1, "nice setup").
+
+Beyond the paper's four seed families, the power-law speedup families of
+concave-speedup scheduling (arXiv:2509.01811, arXiv:1903.09346) are
+represented by the shifted power laws alpha ((1 + y)^p - 1) at p = 1/4 and
+p = 3/4 ("pow25"/"pow75"; the seed "poly" family is exactly p = 1/2) plus a
+saturating exponential ("expsat"), so regret validation spans concavities
+from near-linear to hard-saturating rather than just the seed four. The
+shift keeps f'(0) finite (a raw y^p has f'(0) = inf, violating Def. 1).
 """
 from __future__ import annotations
 
@@ -12,15 +20,36 @@ UTIL_LINEAR = 0
 UTIL_LOG = 1
 UTIL_RECIPROCAL = 2
 UTIL_POLY = 3
-NUM_KINDS = 4
+UTIL_POW25 = 4
+UTIL_POW75 = 5
+UTIL_EXPSAT = 6
+NUM_KINDS = 7
+
+# The first four families shipped with the seed. Trace generation
+# (trace.spec_kinds) cycles "mixed" specs over exactly these so the
+# bitwise-pinned trace goldens and sweep improvement pins survive new
+# family additions; new kinds are reachable by name (cfg.utility).
+NUM_SEED_KINDS = 4
 
 KIND_NAMES = {
     UTIL_LINEAR: "linear",
     UTIL_LOG: "log",
     UTIL_RECIPROCAL: "reciprocal",
     UTIL_POLY: "poly",
+    UTIL_POW25: "pow25",
+    UTIL_POW75: "pow75",
+    UTIL_EXPSAT: "expsat",
 }
 NAME_TO_KIND = {v: k for k, v in KIND_NAMES.items()}
+
+# Shifted-power-law families alpha ((1 + y)^p - 1) by exponent; the heSRPT
+# baseline (core.baselines.hesrpt_step) reads its speedup exponent p here
+# when a spec's utility family is a power law.
+POWER_LAW_EXPONENTS = {
+    UTIL_POLY: 0.5,
+    UTIL_POW25: 0.25,
+    UTIL_POW75: 0.75,
+}
 
 
 def util_value(kinds: jax.Array, alpha: jax.Array, y: jax.Array) -> jax.Array:
@@ -31,6 +60,9 @@ def util_value(kinds: jax.Array, alpha: jax.Array, y: jax.Array) -> jax.Array:
         alpha * jnp.log1p(y),                        # log
         1.0 / alpha - 1.0 / (y + alpha),             # reciprocal
         alpha * jnp.sqrt(y + 1.0) - alpha,           # poly
+        alpha * ((y + 1.0) ** 0.25 - 1.0),           # pow25
+        alpha * ((y + 1.0) ** 0.75 - 1.0),           # pow75
+        alpha * -jnp.expm1(-y),                      # expsat
     ]
     out = jnp.zeros_like(y * alpha)
     for kind, b in enumerate(branches):
@@ -46,6 +78,9 @@ def util_grad(kinds: jax.Array, alpha: jax.Array, y: jax.Array) -> jax.Array:
         alpha / (1.0 + y),
         1.0 / jnp.square(y + alpha),
         alpha / (2.0 * jnp.sqrt(y + 1.0)),
+        0.25 * alpha * (y + 1.0) ** -0.75,
+        0.75 * alpha * (y + 1.0) ** -0.25,
+        alpha * jnp.exp(-y),
     ]
     out = jnp.zeros(jnp.broadcast_shapes(y.shape, alpha.shape), y.dtype)
     for kind, b in enumerate(branches):
@@ -60,6 +95,9 @@ def util_grad_at_zero(kinds: jax.Array, alpha: jax.Array) -> jax.Array:
         alpha,
         1.0 / jnp.square(alpha),
         alpha / 2.0,
+        alpha / 4.0,
+        3.0 * alpha / 4.0,
+        alpha,
     ]
     out = jnp.zeros_like(alpha)
     for kind, b in enumerate(branches):

@@ -47,7 +47,14 @@ from repro.core import baselines, graph, projection, reward
 from repro.core.graph import ClusterSpec
 from repro.kernels import ops
 
+# Default pool (heuristics only — sweep/golden defaults are keyed on these).
 ALGORITHMS = ("ogasched",) + baselines.BASELINES
+# Everything runnable here, including the size/speedup-aware optimal
+# policies. HESRPT runs in "residual work exposed" mode: each slot the
+# policy ranks the admitted jobs against every in-service job's *remaining*
+# work (state.remaining), the exact information the heSRPT optimality proof
+# assumes (arXiv:1903.09346).
+ALL_ALGORITHMS = ("ogasched",) + baselines.ALL_BASELINES
 
 # Jobs with sampled work below this floor still occupy their port for one
 # slot (duration-1 jobs are the slot-mode reduction, not zero-duration).
@@ -180,22 +187,42 @@ def _step(
     q_len = q_len - admit.astype(jnp.int32)
     admit_f = admit.astype(dtype)
 
-    # -- allocate against residual capacity --
-    c_res = graph.residual_capacity(spec, state.held)
-    if algorithm == "ogasched":
-        y_prop = state.y
-    else:
-        y_prop = baselines.step_fn(algorithm)(
-            graph.residual_spec(spec, state.held), admit_f, step_w
+    # -- allocate --
+    if algorithm in baselines.SIZE_AWARE:
+        # Size-aware mode is PREEMPTIVE: heSRPT's optimality proof assumes
+        # the allocation is rebalanced whenever the active set changes
+        # (arXiv:1903.09346 §3), so each slot the policy re-divides the FULL
+        # capacity across every active job — this slot's admissions plus all
+        # in-service jobs, whose residual works (state.remaining) are the
+        # sizes it ranks on. ``held`` is replaced wholesale; feasibility vs
+        # the full c is the policy's own water-fill invariant, so no
+        # residual-capacity netting is needed.
+        sizes = jnp.where(admit, new_work, state.remaining)
+        active_f = (sizes > 0).astype(dtype)
+        held = baselines.step_fn(algorithm)(
+            spec, active_f, step_w, sizes=sizes
         )
-    # exact one-sort projection (core.projection): the per-slot allocation
-    # used to be a second 64-pass bisection inside the scan body.
-    alloc = projection.project_sorted(
-        y_prop * admit_f[:, None, None], spec.a, c_res, spec.mask
-    )
-    reward_t = reward.total_reward(spec, admit_f, alloc)
-
-    held = jnp.where(admit[:, None, None], alloc, state.held)
+        # admission reward on the admitted jobs' share, as in the held path
+        reward_t = reward.total_reward(
+            spec, admit_f, held * admit_f[:, None, None]
+        )
+    else:
+        # Heuristics and OGA hold allocations for a job's whole tenure:
+        # allocate the admitted jobs against the *residual* capacity.
+        c_res = graph.residual_capacity(spec, state.held)
+        if algorithm == "ogasched":
+            y_prop = state.y
+        else:
+            y_prop = baselines.step_fn(algorithm)(
+                graph.residual_spec(spec, state.held), admit_f, step_w
+            )
+        # exact one-sort projection (core.projection): the per-slot
+        # allocation used to be a second 64-pass bisection inside the scan.
+        alloc = projection.project_sorted(
+            y_prop * admit_f[:, None, None], spec.a, c_res, spec.mask
+        )
+        reward_t = reward.total_reward(spec, admit_f, alloc)
+        held = jnp.where(admit[:, None, None], alloc, state.held)
     remaining = jnp.where(admit, new_work, state.remaining)
     svc_arr = jnp.where(admit, new_arr, state.svc_arr)
     svc_start = jnp.where(admit, t, state.svc_start)
@@ -261,7 +288,8 @@ def run(
                 or the ``works`` leaf of a trace batch from either
                 backend); works[t, l] is consumed iff a job arrives at
                 (t, l). Must match ``arrivals``' shape.
-      algorithm: "ogasched" or a baseline name (baselines.BASELINES).
+      algorithm: "ogasched" or a baseline name (baselines.ALL_BASELINES;
+                 size-aware names consume ``works`` as known job sizes).
       eta0, decay: OGA hyperparameters; traced arrays vmap (sched.sweep).
       queue_depth: per-port FIFO bound; overflowing arrivals are dropped.
       rate_floor: minimum service rate, so zero-allocation admissions still

@@ -53,7 +53,10 @@ def run_all(
     if mode not in ("slot", "lifecycle"):
         raise ValueError(f"mode must be 'slot' or 'lifecycle', got {mode!r}")
     spec, arrivals = trace.make(cfg)
-    works = trace.build_works(cfg) if mode == "lifecycle" else None
+    works = (
+        trace.build_works(cfg)
+        if sweep.needs_works(algorithms, mode) else None
+    )
     out: dict[str, SimResult] = {}
     y_star = None
     # The oracle only feeds OGASCHED's regret certificate — skip the
@@ -81,6 +84,7 @@ def run_all(
         else:
             rewards = sweep.run_algorithm(
                 spec, arrivals, name, eta0=eta0, decay=decay, backend=backend,
+                works=works if name in baselines.SIZE_AWARE else None,
             )
             rewards = np.asarray(jax.block_until_ready(rewards))
         res = SimResult(

@@ -176,24 +176,39 @@ def resolve_trace_backend(trace_backend: str, n_points: int) -> str:
     return trace_backend
 
 
+def needs_works(algorithms: Sequence[str], mode: str) -> bool:
+    """Whether a grid over ``algorithms`` must carry job sizes: always in
+    lifecycle mode, and in slot mode exactly when a size-aware baseline
+    (baselines.SIZE_AWARE, e.g. "hesrpt") is in the pool. Derived from
+    already-fingerprinted fields, so streamed-sweep fingerprints are
+    unchanged by the works plumbing."""
+    return mode == "lifecycle" or any(
+        a in baselines.SIZE_AWARE for a in algorithms
+    )
+
+
 def build_batch(
     points: Sequence[SweepPoint],
     mode: str = "slot",
     *,
     trace_backend: str = "host",
+    with_works: Optional[bool] = None,
 ) -> SweepBatch:
     """Generate every point's trace and stack the leaves.
 
     mode="lifecycle" additionally samples per-job work sizes; slot-mode
-    batches carry ``works=None``. ``trace_backend`` selects host numpy
+    batches carry ``works=None`` unless ``with_works=True`` (size-aware
+    slot grids — see ``needs_works``). ``trace_backend`` selects host numpy
     (bitwise-pinned golden path, the default) or one jitted vmapped device
     generation (``trace.make_batch(trace_backend="device")``).
     """
     _check_mode(mode)
     if not points:
         raise ValueError("empty sweep grid")
+    if with_works is None:
+        with_works = mode == "lifecycle"
     spec, arrivals, works = trace.make_batch(
-        [p.cfg for p in points], with_works=mode == "lifecycle",
+        [p.cfg for p in points], with_works=with_works,
         trace_backend=resolve_trace_backend(trace_backend, len(points)),
     )
     return SweepBatch(
@@ -214,18 +229,21 @@ def run_algorithm(
     eta0: float | jax.Array = 25.0,
     decay: float | jax.Array = 0.9999,
     backend: str = "auto",
+    works: Optional[jax.Array] = None,
 ) -> jax.Array:
     """(T,) per-slot rewards of one algorithm on one configuration.
 
     This is the single comparison path: ``simulator.run_all`` calls it per
-    algorithm, and ``run_grid`` vmaps it over a SweepBatch.
+    algorithm, and ``run_grid`` vmaps it over a SweepBatch. Size-aware
+    baselines (baselines.SIZE_AWARE) additionally consume ``works`` (T, L)
+    job sizes.
     """
     if name == "ogasched":
         rewards, _ = ogasched.run(
             spec, arrivals, eta0=eta0, decay=decay, backend=backend,
         )
         return rewards
-    return baselines.run(spec, arrivals, name)
+    return baselines.run(spec, arrivals, name, works=works)
 
 
 # --------------------------------------------------------------------------
@@ -233,7 +251,7 @@ def run_algorithm(
 # the per-shard computation is the exact computation the one-device grid runs.
 # --------------------------------------------------------------------------
 
-def _vmap_slot(spec, arrivals, eta0, decay, *, name, backend):
+def _vmap_slot(spec, arrivals, eta0, decay, *, name, backend, works=None):
     if name == "ogasched":
         if ops.resolve_oga_backend(backend) == "fused":
             # grid-flattened: one fused row-kernel call per step covers the
@@ -245,7 +263,7 @@ def _vmap_slot(spec, arrivals, eta0, decay, *, name, backend):
                 s, a, name, eta0=e, decay=d, backend=backend,
             )
         )(spec, arrivals, eta0, decay)
-    return jax.vmap(lambda s, a: baselines.run(s, a, name))(spec, arrivals)
+    return baselines.run_batch(spec, arrivals, name, works=works)
 
 
 def _vmap_lifecycle(
@@ -342,10 +360,11 @@ def run_grid(
     dispatch can donate.
     """
     _check_mode(mode)
-    if mode == "lifecycle" and batch.works is None:
+    if batch.works is None and needs_works(algorithms, mode):
         raise ValueError(
-            "lifecycle grid needs job sizes: build_batch(points, "
-            "mode='lifecycle')"
+            "grid needs job sizes: build_batch(points, mode='lifecycle') "
+            "or build_batch(points, with_works=True) for size-aware "
+            "slot-mode baselines"
         )
     donate = (
         donate and jax.default_backend() != "cpu"
@@ -373,7 +392,10 @@ def run_grid(
                 batch.spec, batch.arrivals, batch.eta0, batch.decay, backend,
             )
         else:
-            out[name] = baselines.run_batch(batch.spec, batch.arrivals, name)
+            out[name] = baselines.run_batch(
+                batch.spec, batch.arrivals, name,
+                works=batch.works if name in baselines.SIZE_AWARE else None,
+            )
     return {name: out[name] for name in algorithms}
 
 
@@ -395,6 +417,13 @@ def _sharded_grid_fn(
                 name=name, backend=backend, queue_depth=queue_depth,
             )
         in_specs = (gspec, gspec, gspec, gspec, gspec, P())
+    elif name in baselines.SIZE_AWARE:
+        def body(spec, arrivals, works, eta0, decay):
+            return _vmap_slot(
+                spec, arrivals, eta0, decay,
+                name=name, backend=backend, works=works,
+            )
+        in_specs = (gspec, gspec, gspec, gspec, gspec)
     else:
         def body(spec, arrivals, eta0, decay):
             return _vmap_slot(
@@ -441,10 +470,11 @@ def run_grid_sharded(
             batch, algorithms, backend=backend, mode=mode,
             queue_depth=queue_depth, rate_floor=rate_floor,
         )
-    if mode == "lifecycle" and batch.works is None:
+    if batch.works is None and needs_works(algorithms, mode):
         raise ValueError(
-            "lifecycle grid needs job sizes: build_batch(points, "
-            "mode='lifecycle')"
+            "grid needs job sizes: build_batch(points, mode='lifecycle') "
+            "or build_batch(points, with_works=True) for size-aware "
+            "slot-mode baselines"
         )
     G = batch.size
     pad = (-G) % mesh.size
@@ -462,6 +492,8 @@ def run_grid_sharded(
                 spec, arrivals, _pad_rows(batch.works, pad), eta0, decay,
                 jnp.asarray(rate_floor, jnp.float32),
             )
+        elif name in baselines.SIZE_AWARE:
+            res = fn(spec, arrivals, _pad_rows(batch.works, pad), eta0, decay)
         else:
             res = fn(spec, arrivals, eta0, decay)
         out[name] = jax.tree.map(lambda l: l[:G], res) if pad else res
@@ -633,11 +665,15 @@ def _chunk_batches(
     mode: str,
     trace_backend: str,
     start_chunk: int = 0,
+    with_works: Optional[bool] = None,
 ) -> Iterator[tuple[slice, SweepBatch]]:
     """Synchronous chunk generation — the prefetch worker's body."""
     for start in range(start_chunk * chunk_size, len(points), chunk_size):
         chunk = list(points[start:start + chunk_size])
-        batch = build_batch(chunk, mode=mode, trace_backend=trace_backend)
+        batch = build_batch(
+            chunk, mode=mode, trace_backend=trace_backend,
+            with_works=with_works,
+        )
         pad = chunk_size - len(chunk)
         if pad:
             batch = SweepBatch(
@@ -721,6 +757,7 @@ def iter_batches(
     trace_backend: str = "host",
     prefetch: int = 2,
     start_chunk: int = 0,
+    with_works: Optional[bool] = None,
 ) -> Iterator[tuple[slice, SweepBatch]]:
     """Yield ``(grid_slice, batch)`` chunks of a point list.
 
@@ -749,7 +786,9 @@ def iter_batches(
     if start_chunk < 0:
         raise ValueError(f"start_chunk must be >= 0, got {start_chunk}")
     backend = resolve_trace_backend(trace_backend, len(points))
-    it = _chunk_batches(points, chunk_size, mode, backend, start_chunk)
+    it = _chunk_batches(
+        points, chunk_size, mode, backend, start_chunk, with_works,
+    )
     if prefetch > 0:
         it = _prefetched(it, prefetch)
     yield from it
@@ -837,6 +876,7 @@ def run_grid_stream(
         points, chunk_size, mode=mode,
         trace_backend=trace_backend, prefetch=prefetch,
         start_chunk=start_chunk,
+        with_works=needs_works(algorithms, mode),
     )
     while True:
         t_wait = time.monotonic()

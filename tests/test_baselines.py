@@ -54,6 +54,61 @@ def test_binpacking_concentrates_vs_spreading():
     assert nb <= ns, (nb, ns)
 
 
+def test_registry_split():
+    """Goldens key on the heuristic four; the optimal policies extend, not
+    replace, them — and every name resolves to a step function."""
+    assert baselines.BASELINES == ("drf", "fairness", "binpacking", "spreading")
+    assert baselines.OPTIMAL_BASELINES == ("hesrpt", "multiclass")
+    assert baselines.ALL_BASELINES == baselines.BASELINES + baselines.OPTIMAL_BASELINES
+    assert set(baselines.SIZE_AWARE) <= set(baselines.ALL_BASELINES)
+    for name in baselines.ALL_BASELINES:
+        assert callable(baselines.step_fn(name))
+
+
+@pytest.mark.parametrize("name", baselines.OPTIMAL_BASELINES)
+def test_optimal_baselines_feasible(setup, name):
+    spec, arr = setup
+    sizes = jnp.where(arr[7] > 0, 10.0, 0.0)
+    kw = {"sizes": sizes} if name in baselines.SIZE_AWARE else {}
+    y = baselines.step_fn(name)(spec, arr[7], None, **kw)
+    assert bool(graph.feasible(spec, y))
+    off = np.asarray(arr[7]) == 0
+    np.testing.assert_allclose(np.asarray(y)[off], 0.0, atol=1e-6)
+
+
+def test_multiclass_dominates_heuristics_per_slot(setup):
+    """The per-slot fluid argmax must out-reward every heuristic on the
+    same slot — it is optimizing exactly that objective."""
+    from repro.core import reward
+
+    spec, arr = setup
+    x = arr[7]
+    fluid = float(reward.total_reward(
+        spec, x, baselines.multiclass_step(spec, x)
+    ))
+    for name in baselines.BASELINES:
+        w = baselines.default_parallelism(spec, name)
+        y = baselines.step_fn(name)(spec, x, w)
+        assert fluid >= float(reward.total_reward(spec, x, y)) - 1e-3, name
+
+
+def test_size_aware_run_requires_works(setup):
+    spec, arr = setup
+    with pytest.raises(ValueError, match="size-aware"):
+        baselines.run(spec, arr, "hesrpt")
+    works = jnp.where(arr > 0, 12.0, 0.0)
+    rewards = baselines.run(spec, arr, "hesrpt", works=works)
+    assert rewards.shape == (arr.shape[0],)
+    assert bool(jnp.all(jnp.isfinite(rewards)))
+
+
+def test_default_parallelism_none_for_unbudgeted(setup):
+    spec, _ = setup
+    assert baselines.default_parallelism(spec, "fairness") is None
+    for name in baselines.OPTIMAL_BASELINES:
+        assert baselines.default_parallelism(spec, name) is None
+
+
 def test_drf_orders_by_dominant_share():
     """Under extreme scarcity the lowest-dominant-share port wins resources."""
     L, R, K = 2, 1, 1

@@ -1,0 +1,194 @@
+"""heSRPT baseline: closed-form shares vs a numpy oracle, the saturating
+water-fill vs a bisection oracle and the shared breakpoint solve, and
+end-to-end lifecycle JCT dominance on a drain-to-empty workload.
+
+The drain scenario matters: comparing mean JCT over *completed* jobs is
+survivorship-biased when policies complete different job sets, so the
+test appends a long zero-arrival tail and a deep queue — heSRPT must
+finish EVERY arrival, making its mean JCT uncensored.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines, graph, projection
+from repro.sched import lifecycle, trace
+
+
+# ------------------------------------------------------- closed-form shares --
+def _shares_oracle(sizes: np.ndarray, active: np.ndarray, p: float):
+    """arXiv:1903.09346 Thm. 1 shares, straight from the formula: rank the
+    n active jobs descending by size (ties -> lower index first), job of
+    rank i gets (i/n)^q - ((i-1)/n)^q with q = 1/(1-p)."""
+    q = 1.0 / (1.0 - p)
+    idx = np.where(active)[0]
+    order = sorted(idx, key=lambda i: (-sizes[i], i))
+    n = len(order)
+    theta = np.zeros(sizes.shape, np.float64)
+    for rank, i in enumerate(order, start=1):
+        theta[i] = (rank / n) ** q - ((rank - 1) / n) ** q
+    return theta
+
+
+@pytest.mark.parametrize("p", [0.25, 0.5, 0.75])
+@pytest.mark.parametrize("seed", range(3))
+def test_shares_match_closed_form_oracle(p, seed):
+    rng = np.random.default_rng(seed)
+    L = 12
+    sizes = np.round(rng.lognormal(2.0, 1.0, L), 1)  # rounding makes ties
+    active = rng.uniform(size=L) < 0.7
+    active[0] = True  # never empty
+    got = np.asarray(baselines.hesrpt_shares(
+        jnp.asarray(sizes, jnp.float32), jnp.asarray(active), p=p
+    ))
+    want = _shares_oracle(sizes, active, p)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+    assert float(got.sum()) == pytest.approx(1.0, abs=1e-5)
+    np.testing.assert_allclose(got[~active], 0.0, atol=1e-7)
+
+
+def test_shares_srpt_limit():
+    """p -> 1: the smallest remaining job takes (essentially) everything."""
+    sizes = jnp.asarray([9.0, 2.0, 30.0, 5.0])
+    theta = np.asarray(baselines.hesrpt_shares(
+        sizes, jnp.ones(4, bool), p=0.99
+    ))
+    assert theta.argmax() == 1
+    assert theta[1] > 0.999
+
+
+def test_shares_equi_limit():
+    """p -> 0: an exactly equal split over the active set (EQUI)."""
+    sizes = jnp.asarray([9.0, 2.0, 30.0, 5.0, 1.0])
+    active = jnp.asarray([True, True, False, True, True])
+    theta = np.asarray(baselines.hesrpt_shares(sizes, active, p=0.0))
+    np.testing.assert_allclose(theta[np.asarray(active)], 0.25, atol=1e-6)
+
+
+def test_shares_scale_free():
+    """Allocation depends on sizes only through their order (paper prop.)."""
+    rng = np.random.default_rng(7)
+    sizes = jnp.asarray(rng.uniform(1.0, 50.0, 10), jnp.float32)
+    active = jnp.ones(10, bool)
+    a = baselines.hesrpt_shares(sizes, active)
+    b = baselines.hesrpt_shares(sizes * 37.5, active)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ------------------------------------------------- saturating water-filling --
+def _fill_oracle(z, a, mask, c):
+    """Signed-tau bisection for y = clip(z - tau, 0, a) with
+    sum(y * mask) = min(c, sum(a * mask))."""
+    lanes = mask > 0
+    ceff = min(c, float(a[lanes].sum()))
+    s = lambda tau: float(np.clip(z[lanes] - tau, 0.0, a[lanes]).sum())
+    lo, hi = float((z - a).min()) - 1.0, float(z.max()) + 1.0
+    for _ in range(200):
+        mid = 0.5 * (lo + hi)
+        if s(mid) > ceff:
+            lo = mid
+        else:
+            hi = mid
+    y = np.zeros_like(z)
+    y[lanes] = np.clip(z[lanes] - 0.5 * (lo + hi), 0.0, a[lanes])
+    return y
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_fill_rows_matches_bisection_oracle(seed):
+    rng = np.random.default_rng(seed)
+    N, L = 24, 9
+    # the offset-trick reduction assumes z >= 0 (heSRPT ideal points
+    # theta * c always are) — see fill_rows_to_capacity's docstring
+    z = rng.uniform(0.0, 5.0, (N, L))
+    a = rng.uniform(0.1, 4.0, (N, L))
+    mask = (rng.uniform(size=(N, L)) < 0.8).astype(float)
+    mask[:, 0] = 1.0
+    c = rng.uniform(0.2, 10.0, N)
+    got = np.asarray(projection.fill_rows_to_capacity(
+        jnp.asarray(z), jnp.asarray(a), jnp.asarray(mask), jnp.asarray(c)
+    ))
+    for i in range(N):
+        want = _fill_oracle(z[i], a[i], mask[i], float(c[i]))
+        np.testing.assert_allclose(got[i], want, atol=1e-4, err_msg=f"row {i}")
+        # the defining property, independently of the oracle
+        ceff = min(float(c[i]), float((a[i] * (mask[i] > 0)).sum()))
+        assert (got[i] * mask[i]).sum() == pytest.approx(ceff, abs=1e-4)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_fill_equals_projection_on_saturating_rows(seed):
+    """When the inequality projection lands ON the capacity face (demand
+    exceeds capacity), fill_rows_to_capacity and project_rows_sorted solve
+    the same breakpoint program — results must agree to fp tolerance."""
+    rng = np.random.default_rng(100 + seed)
+    N, L = 16, 8
+    z = rng.uniform(0.5, 5.0, (N, L))  # strictly positive demand
+    a = rng.uniform(0.5, 4.0, (N, L))
+    mask = np.ones((N, L))
+    # capacity strictly below unclamped demand => projection saturates
+    c = 0.5 * np.minimum(z, a).sum(axis=1)
+    proj = np.asarray(projection.project_rows_sorted(
+        jnp.asarray(z), jnp.asarray(a), jnp.asarray(mask), jnp.asarray(c)
+    ))
+    fill = np.asarray(projection.fill_rows_to_capacity(
+        jnp.asarray(z), jnp.asarray(a), jnp.asarray(mask), jnp.asarray(c)
+    ))
+    np.testing.assert_allclose(proj, fill, atol=1e-5)
+
+
+# ------------------------------------------------------------ step + policy --
+def test_hesrpt_step_feasible_and_inactive_zero():
+    cfg = trace.TraceConfig(T=40, L=8, R=24, K=6, seed=2, contention=10.0)
+    spec, arr, works = trace.make_lifecycle(cfg)
+    for t in (0, 7, 31):
+        y = baselines.hesrpt_step(spec, arr[t], sizes=works[t])
+        assert bool(graph.feasible(spec, y)), t
+        off = np.asarray(arr[t]) == 0
+        np.testing.assert_allclose(np.asarray(y)[off], 0.0, atol=1e-7)
+
+
+def test_hesrpt_tilts_service_toward_small_jobs():
+    """Relative to the unweighted fluid (multiclass), the theta weighting
+    must shift service rate toward the smallest job and away from the
+    largest. (Absolute rates are not monotone in theta — ports are
+    heterogeneous — so the comparison is against the unweighted solve.)"""
+    from repro.core import reward
+
+    cfg = trace.TraceConfig(T=8, L=6, R=16, K=4, seed=4, contention=20.0)
+    spec = trace.build_spec(cfg)
+    x = jnp.ones(6)
+    sizes = jnp.asarray([5.0, 80.0, 40.0, 60.0, 100.0, 20.0])
+    r_h = np.asarray(reward.service_rates(
+        spec, baselines.hesrpt_step(spec, x, sizes=sizes)
+    ))
+    r_m = np.asarray(reward.service_rates(
+        spec, baselines.multiclass_step(spec, x)
+    ))
+    assert r_h[0] > r_m[0] + 1e-3  # smallest job (largest theta) gains...
+    assert r_h[4] < r_m[4] - 1e-3  # ...the largest job (smallest theta) pays
+
+
+def test_lifecycle_drain_jct_dominance():
+    """Drain-to-empty (192 arrival slots + 512 drain slots, queue deep
+    enough to never drop): heSRPT completes every arrival and its mean JCT
+    beats every size-blind heuristic's — even though the heuristics' JCT is
+    censored-optimistic (they strand ~20% of jobs at the horizon)."""
+    cfg = trace.TraceConfig(
+        L=8, R=32, K=4, T=192, utility="poly", rho=0.35, contention=15.0,
+        density=0.9, work_tail=1.8, burst_prob=0.05, seed=0,
+    )
+    spec, arr, works = trace.make_lifecycle(cfg)
+    pad = jnp.zeros((512, cfg.L), arr.dtype)
+    arr = jnp.concatenate([arr, pad])
+    works = jnp.concatenate([works, pad.astype(works.dtype)])
+    jcts = {}
+    for name in ("hesrpt",) + baselines.BASELINES:
+        tr = lifecycle.run(spec, arr, works, name, queue_depth=128)
+        m = lifecycle.summarize(tr, spec)
+        jcts[name] = m["jct_mean"]
+        if name == "hesrpt":
+            assert m["completed"] == m["arrived"], m  # uncensored
+            assert m["dropped"] == 0.0
+    for name in baselines.BASELINES:
+        assert jcts["hesrpt"] < jcts[name], (name, jcts)

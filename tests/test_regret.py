@@ -1,0 +1,267 @@
+"""Regret machinery + the Thm. 1 statistical validation engine.
+
+Covers the offline comparator (convergence, dominance over the online
+trajectory's own final iterate), curve/scalar consistency, the H_G bound
+against an independent numpy reimplementation of eqs. 45/48, the exponent
+fitting/bootstrap statistics on synthetic curves with known slopes, and
+small-T sublinearity through BOTH OGA backends via the batched curve
+engine and its streamed driver.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph, ogasched, regret
+from repro.sched import sweep, trace
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = trace.TraceConfig(
+        T=300, L=6, R=16, K=4, seed=3, diurnal=False, burst_prob=0.0
+    )
+    spec, arr = trace.make(cfg)
+    return cfg, spec, arr
+
+
+# ------------------------------------------------------ offline comparator --
+def test_offline_optimum_feasible_and_converged(small):
+    """More PGA iterations must not lose value (within fp noise), and the
+    oracle's value must plateau — the certificate that oracle_iters in the
+    benches is enough."""
+    _, spec, arr = small
+    vals = [
+        float(regret.stationary_reward(
+            spec, arr, regret.offline_optimum(spec, arr, iters=it)
+        ))
+        for it in (100, 400, 1600)
+    ]
+    assert bool(graph.feasible(spec, regret.offline_optimum(spec, arr, iters=100)))
+    assert vals[1] >= vals[0] - abs(vals[0]) * 1e-3, vals
+    assert vals[2] >= vals[1] - abs(vals[1]) * 1e-3, vals
+    # converged: the last doubling moves the value < 0.5%
+    assert abs(vals[2] - vals[1]) <= abs(vals[2]) * 5e-3, vals
+
+
+def test_offline_optimum_dominates_online_final_iterate(small):
+    """Regression guard for the unnormalised-counts PGA bug: the comparator
+    must score at least as well as OGA's own final y used as a fixed
+    allocation (a feasible point, so the true optimum dominates it)."""
+    cfg, spec, arr = small
+    eta = float(ogasched.eta_theoretical(spec, cfg.T))
+    _, y_fin = ogasched.run(spec, arr, eta0=eta, decay=1.0)
+    y_star = regret.offline_optimum(spec, arr, iters=1500)
+    q_star = float(regret.stationary_reward(spec, arr, y_star))
+    q_fin = float(regret.stationary_reward(spec, arr, y_fin))
+    assert q_star >= q_fin - abs(q_fin) * 1e-3, (q_star, q_fin)
+
+
+def test_regret_curve_last_entry_is_regret(small):
+    _, spec, arr = small
+    eta = float(ogasched.eta_theoretical(spec, 300))
+    rewards, _ = ogasched.run(spec, arr, eta0=eta, decay=1.0)
+    y_star = regret.offline_optimum(spec, arr, iters=400)
+    curve = regret.regret_curve(spec, arr, rewards, y_star)
+    scalar = regret.regret(spec, arr, rewards, y_star)
+    assert curve.shape == (300,)
+    np.testing.assert_allclose(
+        float(curve[-1]), float(scalar), rtol=1e-4, atol=1e-2
+    )
+    # prefix-sum identity: each increment is that slot's comparator-minus-
+    # online gap, recomputed independently slot by slot
+    from repro.core import reward
+
+    inc = np.diff(np.asarray(curve), prepend=0.0)
+    for t in (0, 17, 150, 299):
+        gap = float(reward.total_reward(spec, arr[t], y_star)) - float(
+            rewards[t]
+        )
+        np.testing.assert_allclose(inc[t], gap, rtol=1e-3, atol=5e-2)
+
+
+def test_h_g_and_bound_match_numpy_oracle(small):
+    """H_G (eqs. 45+48) recomputed independently in numpy from spec fields."""
+    _, spec, arr = small
+    a = np.asarray(spec.a)          # (L, K)
+    c = np.asarray(spec.c)          # (R, K)
+    mask = np.asarray(spec.mask)    # (L, R)
+    alpha = np.asarray(spec.alpha)  # (R, K)
+    kinds = np.asarray(spec.kinds)
+    # varpi = f'(0) per family, numpy renditions of utilities.util_grad_at_zero
+    branches = [alpha, alpha, 1.0 / alpha**2, alpha / 2.0,
+                alpha / 4.0, 3.0 * alpha / 4.0, alpha]
+    w0 = np.zeros_like(alpha)
+    for kind, b in enumerate(branches):
+        w0 = np.where(kinds == kind, b, w0)
+    w_star = w0.max(axis=1)                       # (R,)
+    beta_star = float(np.asarray(spec.beta).max())
+    gnorm = np.sqrt((mask * (beta_star**2 + spec.K * w_star[None, :] ** 2)).sum())
+    diam = np.sqrt(2.0 * (a.max(axis=0) * c.sum(axis=0)).sum())
+    np.testing.assert_allclose(float(regret.h_g(spec)), diam * gnorm, rtol=1e-5)
+    np.testing.assert_allclose(
+        float(regret.regret_bound(spec, 300)),
+        diam * gnorm * np.sqrt(300.0),
+        rtol=1e-5,
+    )
+
+
+# ----------------------------------------------------- grid + curve engine --
+def test_make_regret_grid_labels_and_eta(small):
+    cfg, spec, _ = small
+    pts, labs = regret.make_regret_grid(
+        cfg, utilities=("poly", "linear"), regimes=("stationary", "flash"),
+        seeds=(0, 5),
+    )
+    assert len(pts) == len(labs) == 8
+    # row order: utility x regime x seed, seed fastest
+    assert [(l.utility, l.regime, l.seed) for l in labs[:3]] == [
+        ("poly", "stationary", 0), ("poly", "stationary", 5),
+        ("poly", "flash", 0),
+    ]
+    for p, l in zip(pts, labs):
+        assert p.cfg.utility == l.utility
+        assert p.cfg.seed == l.seed
+        assert p.decay == 1.0
+        assert p.eta0 > 0.0
+        ov = regret.ARRIVAL_REGIMES[l.regime]
+        assert p.cfg.diurnal == ov["diurnal"]
+        assert p.cfg.burst_prob == ov["burst_prob"]
+    # theoretical eta matches eq. 50 on the point's own spec
+    want = float(ogasched.eta_theoretical(trace.build_spec(pts[0].cfg), cfg.T))
+    assert pts[0].eta0 == pytest.approx(want, rel=1e-6)
+    with pytest.raises(ValueError, match="unknown regime"):
+        regret.make_regret_grid(cfg, regimes=("weekly",))
+
+
+@pytest.mark.parametrize("backend", ("fused", "reference"))
+def test_curves_batch_sublinear_small_T(backend):
+    """Both OGA backends: batched curves end below the Thm. 1 bound and the
+    fitted growth exponent (when regret is large enough to fit) is < 1."""
+    base = trace.TraceConfig(T=256, L=5, R=12, K=3)
+    pts, labs = regret.make_regret_grid(
+        base, utilities=("linear",), regimes=("stationary",), seeds=(0, 1),
+    )
+    _, batch = next(iter(sweep.iter_batches(pts, len(pts), mode="slot")))
+    curves = regret.regret_curves_batch(
+        batch.spec, batch.arrivals, batch.eta0, batch.decay,
+        oracle_iters=400, backend=backend,
+    )
+    assert curves.shape == (2, 256)
+    ts = np.arange(1, 257)
+    for g in range(2):
+        row = np.asarray(curves[g])
+        bound = float(regret.regret_bound(
+            jax.tree.map(lambda l: l[g], batch.spec), 256
+        ))
+        assert row[-1] <= bound, (backend, g, row[-1], bound)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            exp = regret.fit_growth_exponent(ts, row, t_min=16)
+        assert not np.isfinite(exp) or exp < 1.0, (backend, g, exp)
+
+
+def test_regret_stream_matches_batch():
+    """Chunked streaming (chunk_size=2 over 5 points) is a pure driver: its
+    sampled curves must equal the resident batched engine's exactly."""
+    base = trace.TraceConfig(T=128, L=5, R=12, K=3)
+    pts, _ = regret.make_regret_grid(
+        base, utilities=("poly",), regimes=("stationary",),
+        seeds=(0, 1, 2, 3, 4),
+    )
+    ts = regret.sample_ts(128, num=16)
+    res = regret.regret_stream(pts, ts=ts, chunk_size=2, oracle_iters=300)
+    assert res["curves"].shape == (5, len(ts))
+    _, batch = next(iter(sweep.iter_batches(pts, len(pts), mode="slot")))
+    full = regret.regret_curves_batch(
+        batch.spec, batch.arrivals, batch.eta0, batch.decay, oracle_iters=300,
+    )
+    np.testing.assert_array_equal(
+        res["curves"], np.asarray(full[:, jnp.asarray(ts - 1)])
+    )
+    np.testing.assert_allclose(res["r_T"], res["curves"][:, -1])
+    np.testing.assert_allclose(
+        res["bound"], res["h_g"] * np.sqrt(128.0), rtol=1e-6
+    )
+
+
+def test_regret_stream_validates_inputs():
+    base = trace.TraceConfig(T=64, L=4, R=8, K=3)
+    pts, _ = regret.make_regret_grid(
+        base, utilities=("poly",), regimes=("stationary",), seeds=(0,),
+    )
+    with pytest.raises(ValueError, match="empty"):
+        regret.regret_stream([])
+    bad = pts + [dataclasses.replace(
+        pts[0], cfg=dataclasses.replace(pts[0].cfg, T=32)
+    )]
+    with pytest.raises(ValueError, match="share T"):
+        regret.regret_stream(bad)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        regret.regret_stream(pts, ts=np.asarray([1, 128]))
+
+
+# ------------------------------------------------------ exponent statistics --
+def test_sample_ts_properties():
+    ts = regret.sample_ts(50_000)
+    assert ts[0] >= 1 and ts[-1] == 50_000
+    assert np.all(np.diff(ts) > 0)
+    assert len(ts) <= 65
+    short = regret.sample_ts(5)
+    assert short[-1] == 5
+
+
+def test_fit_growth_exponent_recovers_known_slope():
+    ts = regret.sample_ts(10_000)
+    for slope in (0.5, 0.9):
+        curve = 3.0 * ts.astype(float) ** slope
+        got = regret.fit_growth_exponent(ts, curve)
+        assert got == pytest.approx(slope, abs=1e-6)
+
+
+def test_fit_growth_exponent_warns_and_nans_on_unfittable():
+    ts = regret.sample_ts(1000)
+    curve = -5.0 * np.ones_like(ts, float)  # negative regret everywhere
+    with pytest.warns(UserWarning, match="usable curve points"):
+        got = regret.fit_growth_exponent(ts, curve)
+    assert np.isnan(got)
+
+
+def test_bootstrap_exponent_ci_brackets_point():
+    rng = np.random.default_rng(0)
+    ts = regret.sample_ts(10_000)
+    base = 5.0 * ts.astype(float) ** 0.5
+    curves = base[None, :] * rng.uniform(0.8, 1.2, size=(8, 1))
+    out = regret.bootstrap_exponent(ts, curves, n_boot=100)
+    assert out["n_seeds"] == 8
+    assert out["exponent"] == pytest.approx(0.5, abs=0.02)
+    assert out["ci_lo"] <= out["exponent"] <= out["ci_hi"]
+    assert out["ci_hi"] < 1.0
+    with pytest.raises(ValueError, match="seeds"):
+        regret.bootstrap_exponent(ts, base)
+
+
+def test_regret_validation_groups_cells():
+    base = trace.TraceConfig(T=96, L=4, R=8, K=3)
+    pts, labs = regret.make_regret_grid(
+        base, utilities=("linear", "poly"), regimes=("stationary",),
+        seeds=(0, 1),
+    )
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        recs = regret.regret_validation(
+            pts, labs, chunk_size=4, oracle_iters=300, n_boot=20,
+        )
+    assert {(r["utility"], r["regime"]) for r in recs} == {
+        ("linear", "stationary"), ("poly", "stationary"),
+    }
+    for r in recs:
+        assert r["n_seeds"] == 2
+        assert r["bound"] > 0.0
+        assert isinstance(r["bound_ok"], bool)
+        assert isinstance(r["sublinear"], bool)
+    with pytest.raises(ValueError, match="parallel"):
+        regret.regret_validation(pts, labs[:-1])

@@ -44,7 +44,48 @@ def test_grad_matches_autodiff(kind):
     for y0 in [0.1, 1.0, 7.3, 42.0]:
         got = U.util_grad(jnp.asarray(kind), alpha, jnp.asarray(y0))
         want = jax.grad(f)(jnp.asarray(y0))
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+        # atol floor: expsat's f32 tail saturates (expm1(-42) == -1.0
+        # exactly, autodiff grad 0) while the closed form keeps ~1e-19
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-12
+        )
+
+
+@given(
+    kind=st.sampled_from(KINDS),
+    alpha=st.floats(1.0, 1.5),
+    y0=st.floats(0.0, 60.0),
+    y1=st.floats(0.0, 60.0),
+    lam=st.floats(0.0, 1.0),
+)
+@settings(max_examples=80, deadline=None)
+def test_concave_secant_property(kind, alpha, y0, y1, lam):
+    """f(lam y0 + (1-lam) y1) >= lam f(y0) + (1-lam) f(y1) — concavity as
+    a pointwise property, not just a discretised second difference."""
+    a = jnp.asarray(alpha)
+    k = jnp.asarray(kind)
+    f = lambda y: float(U.util_value(k, a, jnp.asarray(y)))
+    mid = f(lam * y0 + (1.0 - lam) * y1)
+    chord = lam * f(y0) + (1.0 - lam) * f(y1)
+    assert mid >= chord - 1e-4 * (1.0 + abs(chord))
+
+
+@given(
+    kind=st.sampled_from(KINDS),
+    alpha=st.floats(1.0, 1.5),
+    # strictly interior: at y == 0 autodiff halves the max(y, 0) clamp's
+    # subgradient while the closed form reports the right-derivative
+    y=st.floats(1e-3, 100.0),
+)
+@settings(max_examples=80, deadline=None)
+def test_grad_matches_autodiff_property(kind, alpha, y):
+    """util_grad == jax.grad(util_value) across the whole sampled domain
+    (the parametrized spot-check above covers only four points)."""
+    a = jnp.asarray(alpha)
+    k = jnp.asarray(kind)
+    got = float(U.util_grad(k, a, jnp.asarray(y)))
+    want = float(jax.grad(lambda v: U.util_value(k, a, v))(jnp.asarray(y)))
+    assert abs(got - want) <= 1e-6, (got, want)
 
 
 @given(

@@ -20,6 +20,7 @@ from __future__ import annotations
 import math
 
 from benchmarks.common import emit
+from repro import compat
 from repro.core import regret
 from repro.sched import trace
 
@@ -31,15 +32,24 @@ def run(quick: bool = True) -> list[dict]:
     points, labels = regret.make_regret_grid(
         base, regimes=("stationary", "flash"), seeds=seeds,
     )
-    records = regret.regret_validation(
-        points, labels,
-        chunk_size=16 if quick else 8,
-        oracle_iters=1500,
-        n_boot=200,
-    )
+    # the whole grid streams through one chunked driver, so XLA backend
+    # compiles are a run-level quantity: every cell record carries the same
+    # count as provenance (a jump between PRs means the driver started
+    # recompiling per chunk — the bug class test_sanitizers.py pins at 0
+    # for warm streams)
+    with compat.CompilationCounter() as cc:
+        records = regret.regret_validation(
+            points, labels,
+            chunk_size=16 if quick else 8,
+            oracle_iters=1500,
+            n_boot=200,
+        )
     for r in records:
         # provenance the JSON needs to be interpretable on its own
-        r.update(T=T, eta="theoretical(eq.50)", decay=1.0)
+        r.update(
+            T=T, eta="theoretical(eq.50)", decay=1.0,
+            jit_backend_compiles=cc.count if cc.supported else None,
+        )
         exp, lo, hi = r["exponent"], r["ci_lo"], r["ci_hi"]
         emit(
             f"thm1.regret.{r['utility']}.{r['regime']}",

@@ -33,6 +33,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
+from repro import compat
 from repro.sched import sweep, trace
 
 # small per-config shape so grid-size scaling (not per-config cost)
@@ -62,38 +63,43 @@ def _time_streamed(
     points, mode: str, chunk: int,
     backend: str = "auto", trace_backend: str = "device",
 ):
-    """(wall_s, summary, overlap_ratio) for the production streaming path.
+    """(wall_s, summary, overlap_ratio, compiles) for the streaming path.
 
     Drives the REAL ``sweep.run_grid_stream`` (so the CI-gated numbers
     cannot drift from what ``sweep_stream`` actually runs) with its
     ``stats`` telemetry: ``chunk_wait_s`` is the time the driver stalled
     waiting on the prefetched chunk pipeline — trace synthesis/padding/
     upload the background worker failed to hide, NOT dispatch or reduction
-    cost. ``overlap_ratio`` = 1 - chunk_wait/wall.
+    cost. ``overlap_ratio`` = 1 - chunk_wait/wall. ``compiles`` is the
+    number of XLA backend compiles the run triggered (None when
+    jax.monitoring is unavailable): after warmup every chunk reuses the
+    first chunk's executable, so measured runs must report 0 — the CI
+    recompile gate enforces exactly that on the streamed records.
     """
     t0 = time.time()
     stats: dict = {}
     parts: dict[str, list[np.ndarray]] = {}
-    for _, batch, out in sweep.run_grid_stream(
-        points, ALGOS, chunk_size=chunk, mode=mode,
-        backend=backend, trace_backend=trace_backend, donate=True,
-        stats=stats,
-    ):
-        summ = (
-            sweep.summarize_lifecycle(out, batch) if mode == "lifecycle"
-            else sweep.summarize(out)
-        )
-        for k, v in summ.items():
-            parts.setdefault(k, []).append(np.asarray(v))
+    with compat.CompilationCounter() as cc:
+        for _, batch, out in sweep.run_grid_stream(
+            points, ALGOS, chunk_size=chunk, mode=mode,
+            backend=backend, trace_backend=trace_backend, donate=True,
+            stats=stats,
+        ):
+            summ = (
+                sweep.summarize_lifecycle(out, batch) if mode == "lifecycle"
+                else sweep.summarize(out)
+            )
+            for k, v in summ.items():
+                parts.setdefault(k, []).append(np.asarray(v))
     wall = time.time() - t0
     summ = {k: np.concatenate(v) for k, v in parts.items()}
     stall = stats.get("chunk_wait_s", 0.0)
     overlap = max(0.0, min(1.0, 1.0 - stall / max(wall, 1e-9)))
-    return wall, summ, overlap
+    return wall, summ, overlap, (cc.count if cc.supported else None)
 
 
 def _record(name, mode, G, chunk, elapsed, records, backend="fused",
-            trace_backend="host", overlap_ratio=None):
+            trace_backend="host", overlap_ratio=None, jit_cache_misses=None):
     mem = sweep.grid_memory_bytes(CFG, G, mode=mode, algorithms=ALGOS)
     peak = sweep.grid_memory_bytes(
         CFG, min(chunk, G) if chunk else G, mode=mode, algorithms=ALGOS,
@@ -113,6 +119,8 @@ def _record(name, mode, G, chunk, elapsed, records, backend="fused",
     }
     if overlap_ratio is not None:
         rec["overlap_ratio"] = round(overlap_ratio, 3)
+    if jit_cache_misses is not None:
+        rec["jit_cache_misses"] = jit_cache_misses
     records.append(rec)
     emit(
         f"sweep.{name}.{mode}.{backend}.traces={trace_backend}"
@@ -204,7 +212,7 @@ def run(quick: bool = True) -> list[dict]:
     _time_resident(warm, "slot")
     _time_streamed(warm, "slot", CHUNK)
     _, s_host = _time_resident(warm, "slot")
-    _, s_stream_host, _ = _time_streamed(
+    _, s_stream_host, _, _ = _time_streamed(
         warm, "slot", CHUNK, trace_backend="host"
     )
     for k in s_host:  # streamed host path = pure reorganisation of resident
@@ -229,19 +237,22 @@ def run(quick: bool = True) -> list[dict]:
     res_el = {G: 0.0 for G in sizes}
     str_el = {G: 0.0 for G in sizes}
     str_ov = {G: 0.0 for G in sizes}
+    str_cc: dict[int, int | None] = {G: 0 for G in sizes}
     for _ in range(rounds):
         for G in sizes:
             t, _ = _time_resident(pts[G], "slot")
             res_el[G] += t
-            t, _, ov = _time_streamed(pts[G], "slot", CHUNK)
+            t, _, ov, cc = _time_streamed(pts[G], "slot", CHUNK)
             str_el[G] += t
             str_ov[G] += ov
+            str_cc[G] = None if cc is None else (str_cc[G] or 0) + cc
     fused_cps: dict[int, float] = {}
     for G in sizes:
         _record("resident", "slot", G, 0, res_el[G] / rounds, records)
         rec = _record(
             "streamed", "slot", G, CHUNK, str_el[G] / rounds, records,
             trace_backend="device", overlap_ratio=str_ov[G] / rounds,
+            jit_cache_misses=str_cc[G],
         )
         fused_cps[G] = rec["configs_per_s"]
 
@@ -277,18 +288,21 @@ def run(quick: bool = True) -> list[dict]:
     G_life = 32 if quick else 256
     life_pts = _points(G_life)
     _time_streamed(life_pts[:16], "lifecycle", 16)  # warm
-    t_life, _, ov_life = _time_streamed(life_pts, "lifecycle", 16)
+    t_life, _, ov_life, cc_life = _time_streamed(life_pts, "lifecycle", 16)
     _record("streamed", "lifecycle", G_life, 16, t_life, records,
-            trace_backend="device", overlap_ratio=ov_life)
+            trace_backend="device", overlap_ratio=ov_life,
+            jit_cache_misses=cc_life)
 
     if not quick:
         # acceptance scale: full-grid tensors for these would be resident
         # gigabytes in lifecycle mode; the stream holds one chunk (plus the
-        # prefetched next chunk's inputs) at a time
-        t10k, _, ov = _time_streamed(_points(10_000), "slot", 256)
+        # prefetched next chunk's inputs) at a time. Chunk shapes here are
+        # cold (never warmed), so the recompile gate exempts them: misses
+        # are reported as provenance, not gated.
+        t10k, _, ov, _ = _time_streamed(_points(10_000), "slot", 256)
         _record("streamed", "slot", 10_000, 256, t10k, records,
                 trace_backend="device", overlap_ratio=ov)
-        t2k, _, ov = _time_streamed(_points(2_000), "lifecycle", 32)
+        t2k, _, ov, _ = _time_streamed(_points(2_000), "lifecycle", 32)
         _record("streamed", "lifecycle", 2_000, 32, t2k, records,
                 trace_backend="device", overlap_ratio=ov)
 

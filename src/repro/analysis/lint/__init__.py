@@ -1,0 +1,73 @@
+"""JAX-aware static analysis codifying this repo's shipped-bug taxonomy.
+
+Every rule here encodes a bug class that actually reached main (see
+docs/static_analysis.md for the catalog with the historical incident each
+rule replays):
+
+==========================  =================================================
+rule                        historical bug
+==========================  =================================================
+aliased-buffer-dispatch     serve/engine.py async decode read next step's
+                            mutated token buffer (PR 5 "flake")
+rng-offset-derivation       trace streams seeded seed/seed+1/seed+2 collided
+                            across sweep configs (PR 3)
+torn-publish                checkpoint manifest published before the payload
+                            was durable (PR 6)
+sort-in-loop                jnp sort in fori_loop miscompiled loop-invariant
+                            on XLA:CPU under shard_map (PR 3)
+host-sync-in-hot-loop       guards the engine/sweep hot loops' async
+                            dispatch pipeline
+nonhashable-jit-static      TypeError at call time / recompile-per-call
+donation-use-after-dispatch sweep chunk donation (PR 4): donated buffers die
+                            at dispatch
+impure-scan-body            scan bodies must be pure or trace-time effects
+                            run once, not per step
+==========================  =================================================
+
+Usage::
+
+    from repro.analysis import lint
+    findings = lint.lint_paths(["src", "tests", "benchmarks"])
+
+    PYTHONPATH=src python -m repro.analysis.lint src tests benchmarks
+
+Suppress an intentional instance with ``# lint: disable=<rule>`` on the
+flagged line (or a comment line directly above it).
+"""
+from repro.analysis.lint.core import (  # noqa: F401
+    RULES,
+    Finding,
+    FileContext,
+    Rule,
+    iter_py_files,
+    lint_file,
+    lint_paths,
+    lint_source,
+    register,
+)
+
+# importing the rule modules populates the registry
+from repro.analysis.lint import (  # noqa: E402,F401
+    rules_buffers,
+    rules_ckpt,
+    rules_jit,
+    rules_rng,
+)
+from repro.analysis.lint.reporters import (  # noqa: F401
+    render_json,
+    render_text,
+)
+
+__all__ = [
+    "RULES",
+    "Finding",
+    "FileContext",
+    "Rule",
+    "register",
+    "lint_source",
+    "lint_file",
+    "lint_paths",
+    "iter_py_files",
+    "render_text",
+    "render_json",
+]

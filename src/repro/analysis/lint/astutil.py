@@ -1,0 +1,330 @@
+"""Shared AST machinery for the JAX-aware lint rules.
+
+Everything here is intentionally *syntactic*: the linter never imports the
+code it analyses, so "what does this name mean" is answered by resolving
+local aliases through the file's own import statements (``import jax.numpy
+as jnp`` makes ``jnp.sort`` canonical ``jax.numpy.sort``) and by collecting
+the file's own binding sites (``self._step = jax.jit(...)`` makes
+``self._step`` a known jitted callable). The rules consume three shared
+views of a module:
+
+* :class:`Imports` — alias-aware canonical-name resolution for dotted
+  expressions;
+* :func:`loop_bodies` — the function/lambda nodes passed as ``lax.scan`` /
+  ``fori_loop`` / ``while_loop`` bodies (through ``functools.partial`` and
+  ``jax.checkpoint`` wrappers), i.e. the traced hot loops;
+* :func:`jit_bindings` — every callable the file jits (decorator or
+  assignment form) with its literal ``static_argnums`` / ``static_argnames``
+  / ``donate_argnums``.
+
+No type inference is attempted: a rule only fires when the pattern is
+visible in the one file being linted (the analysis is per-module and not
+interprocedural — a sort hidden behind a helper call inside a scan body is
+out of scope by design, see docs/static_analysis.md).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator, Optional, Union
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef]
+BodyNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+
+class Imports:
+    """Canonical-name resolution through the module's import aliases."""
+
+    def __init__(self, module: ast.Module):
+        self.alias: dict[str, str] = {}
+        for node in ast.walk(module):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        self.alias[a.asname] = a.name
+                    else:
+                        root = a.name.split(".")[0]
+                        self.alias[root] = root
+            elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+                for a in node.names:
+                    if a.name != "*":
+                        self.alias[a.asname or a.name] = f"{node.module}.{a.name}"
+
+    def resolve(self, node: ast.expr) -> Optional[str]:
+        """Dotted canonical name of an expression, or None if not a plain
+        (possibly aliased) name chain. ``self.x`` resolves to ``self.x`` —
+        file-local attribute bindings are name-space enough for the rules."""
+        if isinstance(node, ast.Name):
+            return self.alias.get(node.id, node.id)
+        if isinstance(node, ast.Attribute):
+            base = self.resolve(node.value)
+            return None if base is None else f"{base}.{node.attr}"
+        return None
+
+
+def get_arg(call: ast.Call, idx: int, name: str) -> Optional[ast.expr]:
+    """Positional-or-keyword argument lookup on a Call node."""
+    plain = [a for a in call.args if not isinstance(a, ast.Starred)]
+    if len(plain) == len(call.args) and len(call.args) > idx:
+        return call.args[idx]
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def functions(module: ast.Module) -> Iterator[FunctionNode]:
+    for node in ast.walk(module):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def walk_scope(fn: ast.AST) -> Iterator[ast.AST]:
+    """Walk a function's own nodes, not descending into nested function
+    definitions or lambdas (their statements belong to a different dynamic
+    scope — a mutation inside a nested def is not "later in this function")."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def parent_map(root: ast.AST) -> dict[int, ast.AST]:
+    return {
+        id(child): parent
+        for parent in ast.walk(root)
+        for child in ast.iter_child_nodes(parent)
+    }
+
+
+def enclosing_stmt(pmap: dict[int, ast.AST], node: ast.AST) -> Optional[ast.stmt]:
+    while node is not None and not isinstance(node, ast.stmt):
+        node = pmap.get(id(node))
+    return node
+
+
+def param_names(fn: BodyNode) -> set[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+def buffer_base(node: ast.expr) -> Optional[str]:
+    """The mutable-buffer identity of an lvalue-ish expression: peel
+    subscripts, keep ``name`` or one-level ``obj.attr`` chains (the
+    ``self.pending`` shape). Calls and deeper chains have no stable
+    identity for the flow rules and return None."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+        return f"{node.value.id}.{node.attr}"
+    return None
+
+
+# -- traced-loop bodies ------------------------------------------------------
+
+# callable-argument slots of the lax control-flow primitives
+LOOP_BODY_SLOTS: dict[str, tuple[tuple[int, str], ...]] = {
+    "jax.lax.scan": ((0, "f"),),
+    "jax.lax.fori_loop": ((2, "body_fun"),),
+    "jax.lax.while_loop": ((0, "cond_fun"), (1, "body_fun")),
+}
+
+_BODY_WRAPPERS = {"functools.partial", "jax.checkpoint", "jax.remat"}
+
+
+def _defs_by_name(module: ast.Module) -> dict[str, list[FunctionNode]]:
+    out: dict[str, list[FunctionNode]] = {}
+    for node in functions(module):
+        out.setdefault(node.name, []).append(node)
+    return out
+
+
+def _unwrap_body(imports: Imports, node: ast.expr) -> ast.expr:
+    """Peel partial/checkpoint wrappers around a loop-body argument."""
+    while isinstance(node, ast.Call):
+        if imports.resolve(node.func) in _BODY_WRAPPERS and node.args:
+            node = node.args[0]
+        else:
+            break
+    return node
+
+
+def loop_bodies(
+    module: ast.Module, imports: Imports
+) -> list[tuple[BodyNode, str]]:
+    """Every (function node, loop primitive) passed as a lax loop body."""
+    defs = _defs_by_name(module)
+    seen: set[int] = set()
+    out: list[tuple[BodyNode, str]] = []
+
+    def add(node: BodyNode, prim: str) -> None:
+        if id(node) not in seen:
+            seen.add(id(node))
+            out.append((node, prim))
+
+    for node in ast.walk(module):
+        if not isinstance(node, ast.Call):
+            continue
+        prim = imports.resolve(node.func)
+        slots = LOOP_BODY_SLOTS.get(prim or "")
+        if not slots:
+            continue
+        for idx, kwname in slots:
+            arg = get_arg(node, idx, kwname)
+            if arg is None:
+                continue
+            arg = _unwrap_body(imports, arg)
+            if isinstance(arg, ast.Lambda):
+                add(arg, prim)
+            elif isinstance(arg, ast.Name):
+                for d in defs.get(arg.id, ()):
+                    add(d, prim)
+    return out
+
+
+# -- jit bindings ------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class JitInfo:
+    """One callable the file jits, with its literal jit options."""
+
+    name: str  # canonical callable name at use sites ('run', 'self._step')
+    node: ast.AST  # the jit call or decorated FunctionDef (for line info)
+    fn_def: Optional[BodyNode]  # body when resolvable in this file
+    static_argnums: tuple[int, ...] = ()
+    static_argnames: tuple[str, ...] = ()
+    donate_argnums: tuple[int, ...] = ()
+
+
+def _const_tuple(node: Optional[ast.expr], typ: type) -> tuple:
+    if node is None:
+        return ()
+    if isinstance(node, ast.Constant) and isinstance(node.value, typ):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        vals = []
+        for e in node.elts:
+            if not (isinstance(e, ast.Constant) and isinstance(e.value, typ)):
+                return ()
+            vals.append(e.value)
+        return tuple(vals)
+    return ()
+
+
+def _jit_kwargs(keywords: list[ast.keyword]) -> dict:
+    kw = {k.arg: k.value for k in keywords if k.arg}
+    return {
+        "static_argnums": _const_tuple(kw.get("static_argnums"), int),
+        "static_argnames": _const_tuple(kw.get("static_argnames"), str),
+        "donate_argnums": _const_tuple(kw.get("donate_argnums"), int),
+    }
+
+
+def _jit_call_parts(
+    imports: Imports, node: ast.expr
+) -> Optional[tuple[Optional[ast.expr], dict]]:
+    """(fn expression, jit options) if ``node`` is a jit application:
+    ``jax.jit(f, **kw)`` or ``partial(jax.jit, **kw)(f)``."""
+    if not isinstance(node, ast.Call):
+        return None
+    cn = imports.resolve(node.func)
+    if cn == "jax.jit":
+        fn = node.args[0] if node.args else None
+        return fn, _jit_kwargs(node.keywords)
+    if isinstance(node.func, ast.Call):
+        inner = node.func
+        if (
+            imports.resolve(inner.func) == "functools.partial"
+            and inner.args
+            and imports.resolve(inner.args[0]) == "jax.jit"
+        ):
+            fn = node.args[0] if node.args else None
+            return fn, _jit_kwargs(inner.keywords)
+    return None
+
+
+def _resolve_fn_def(
+    defs: dict[str, list[FunctionNode]], fn: Optional[ast.expr]
+) -> Optional[BodyNode]:
+    if isinstance(fn, ast.Lambda):
+        return fn
+    if isinstance(fn, ast.Name):
+        cands = defs.get(fn.id)
+        if cands:
+            return cands[0]
+    return None
+
+
+def jit_bindings(module: ast.Module, imports: Imports) -> dict[str, JitInfo]:
+    """Canonical name -> JitInfo for every jit binding visible in the file.
+
+    Covers ``g = jax.jit(f, ...)``, ``self._step = jax.jit(...)``,
+    ``g = partial(jax.jit, ...)(f)``, ``@jax.jit`` and
+    ``@partial(jax.jit, ...)`` decorators.
+    """
+    defs = _defs_by_name(module)
+    out: dict[str, JitInfo] = {}
+
+    for node in ast.walk(module):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            name = buffer_base(node.targets[0])
+            parts = _jit_call_parts(imports, node.value)
+            if name and parts:
+                fn, kw = parts
+                out[name] = JitInfo(
+                    name=name,
+                    node=node.value,
+                    fn_def=_resolve_fn_def(defs, fn),
+                    **kw,
+                )
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if imports.resolve(dec) == "jax.jit":
+                    out[node.name] = JitInfo(node.name, node, node)
+                    break
+                if isinstance(dec, ast.Call):
+                    cn = imports.resolve(dec.func)
+                    if cn == "jax.jit":
+                        out[node.name] = JitInfo(
+                            node.name, node, node, **_jit_kwargs(dec.keywords)
+                        )
+                        break
+                    if (
+                        cn == "functools.partial"
+                        and dec.args
+                        and imports.resolve(dec.args[0]) == "jax.jit"
+                    ):
+                        out[node.name] = JitInfo(
+                            node.name, node, node, **_jit_kwargs(dec.keywords)
+                        )
+                        break
+    return out
+
+
+def jitted_contexts(
+    module: ast.Module, imports: Imports
+) -> list[tuple[BodyNode, str]]:
+    """Function bodies that run under trace: jitted defs + lax loop bodies,
+    each tagged with what makes it traced ('jax.jit' or the loop primitive)."""
+    out: list[tuple[BodyNode, str]] = []
+    seen: set[int] = set()
+    for info in jit_bindings(module, imports).values():
+        if info.fn_def is not None and id(info.fn_def) not in seen:
+            seen.add(id(info.fn_def))
+            out.append((info.fn_def, "jax.jit"))
+    for body, prim in loop_bodies(module, imports):
+        if id(body) not in seen:
+            seen.add(id(body))
+            out.append((body, prim))
+    return out

@@ -1,0 +1,245 @@
+"""Host-buffer discipline rules: aliasing across async dispatch, and
+reads of donated buffers.
+
+Historical bug (PR 5): ``serve/engine.py`` handed jax a *view* of the
+mutable ``self.pending`` numpy buffer (``jnp.asarray(self.pending[:, None])``)
+and then mutated ``self.pending`` a few lines later in the same method.
+jax dispatch is asynchronous and on CPU the device buffer can alias host
+memory, so under load the in-flight decode read the NEXT step's tokens —
+four distinct output sequences over forty runs with fixed inputs, visible
+only as a "flake". The fix snapshots with ``np.array(..., copy=True)``
+before dispatch; `aliased-buffer-dispatch` rejects the un-snapshotted shape.
+
+`donation-use-after-dispatch` guards the sweep engine's chunk-donation
+machinery (PR 4): an argument passed through ``donate_argnums`` is dead the
+moment the call is dispatched, and reading it afterwards returns garbage
+(or errors) depending on backend.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.lint import astutil
+from repro.analysis.lint.core import Finding, FileContext, Rule, register
+
+# method calls that return an independent buffer — the subtree below them
+# cannot alias the argument handed to jax
+SANITIZING_METHODS = {"copy", "astype", "tolist", "tobytes", "item"}
+SANITIZING_CALLS = {
+    "numpy.copy",
+    "numpy.ascontiguousarray",
+    "numpy.asfortranarray",
+    "jax.device_get",
+    # jnp.array copies by default (copy=True) unlike jnp.asarray
+    "jax.numpy.array",
+}
+# in-place ndarray methods: proof the base is a mutable host buffer
+MUTATING_METHODS = {"fill", "sort", "partition", "put", "itemset", "resize"}
+
+
+def _dispatch_names(jits: dict[str, astutil.JitInfo]) -> set[str]:
+    return set(jits)
+
+
+def _is_dispatch(cn: Optional[str], jit_names: set[str]) -> bool:
+    if cn is None:
+        return False
+    if cn in jit_names or cn == "jax.device_put":
+        return True
+    # every jnp op uploads its array arguments; jnp.array is the sanctioned
+    # snapshot (it copies) and is treated as a sanitizer instead
+    return cn.startswith("jax.numpy.") and cn != "jax.numpy.array"
+
+
+def _exposed_bases(
+    imports: astutil.Imports, node: ast.expr
+) -> Iterator[tuple[str, ast.expr]]:
+    """Buffer bases reachable from an argument expression without passing
+    through a copy. Yields (base name, the expression that exposes it)."""
+    if isinstance(node, ast.Call):
+        cn = imports.resolve(node.func)
+        if cn in SANITIZING_CALLS:
+            return
+        if cn == "numpy.array":
+            copy_kw = next(
+                (kw.value for kw in node.keywords if kw.arg == "copy"), None
+            )
+            explicit_nocopy = (
+                isinstance(copy_kw, ast.Constant) and copy_kw.value is False
+            )
+            if not explicit_nocopy:  # np.array copies by default
+                return
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr in SANITIZING_METHODS
+        ):
+            return
+        for a in node.args:
+            yield from _exposed_bases(imports, a)
+        for kw in node.keywords:
+            yield from _exposed_bases(imports, kw.value)
+        return
+    base = astutil.buffer_base(node)
+    if base is not None:
+        yield base, node
+        return
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, ast.expr):
+            yield from _exposed_bases(imports, child)
+
+
+def _mutations(fn: ast.AST) -> dict[str, list[int]]:
+    """base name -> lines where the buffer is mutated in place."""
+    out: dict[str, list[int]] = {}
+
+    def add(base: Optional[str], line: int) -> None:
+        if base is not None:
+            out.setdefault(base, []).append(line)
+
+    for node in astutil.walk_scope(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript):
+                    add(astutil.buffer_base(t), node.lineno)
+        elif isinstance(node, ast.AugAssign):
+            # x[i] += v and x += v both mutate ndarrays in place;
+            # plain-name AugAssign on scalars is filtered by the dispatch
+            # side (scalars fed to jax are not flagged as buffer views)
+            add(astutil.buffer_base(node.target), node.lineno)
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr in MUTATING_METHODS:
+                add(astutil.buffer_base(f.value), node.lineno)
+    return out
+
+
+@register
+class AliasedBufferDispatch(Rule):
+    name = "aliased-buffer-dispatch"
+    summary = (
+        "mutable host buffer handed to a jax call as a view, then mutated "
+        "in the same function — async dispatch may read the mutated bytes"
+    )
+
+    def run(self, module: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        imports = astutil.Imports(module)
+        jit_names = _dispatch_names(astutil.jit_bindings(module, imports))
+        for fn in astutil.functions(module):
+            muts = _mutations(fn)
+            if not muts:
+                continue
+            for node in astutil.walk_scope(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                cn = imports.resolve(node.func)
+                if not _is_dispatch(cn, jit_names):
+                    continue
+                seen: set[str] = set()
+                args = list(node.args) + [kw.value for kw in node.keywords]
+                for arg in args:
+                    for base, _expr in _exposed_bases(imports, arg):
+                        if base in seen:
+                            continue
+                        later = [
+                            m for m in muts.get(base, ())
+                            if m > (node.end_lineno or node.lineno)
+                        ]
+                        if later:
+                            seen.add(base)
+                            yield self.finding(
+                                ctx, node,
+                                f"'{base}' is passed to {cn} without a "
+                                f"snapshot and mutated later at line "
+                                f"{later[0]}; the asynchronously dispatched "
+                                "computation can read the mutated bytes "
+                                "(the serve/engine.py decode race) — "
+                                "snapshot with np.array(..., copy=True) "
+                                "before dispatch",
+                            )
+
+
+@register
+class DonationUseAfterDispatch(Rule):
+    name = "donation-use-after-dispatch"
+    summary = (
+        "argument passed via donate_argnums is read again after the call — "
+        "donated buffers are invalidated at dispatch"
+    )
+
+    def run(self, module: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        imports = astutil.Imports(module)
+        donors = {
+            name: info
+            for name, info in astutil.jit_bindings(module, imports).items()
+            if info.donate_argnums
+        }
+        if not donors:
+            return
+        for fn in astutil.functions(module):
+            pmap = astutil.parent_map(fn)
+            for call in astutil.walk_scope(fn):
+                if not isinstance(call, ast.Call):
+                    continue
+                info = donors.get(imports.resolve(call.func) or "")
+                if info is None:
+                    continue
+                plain_positional = not any(
+                    isinstance(a, ast.Starred) for a in call.args
+                )
+                if not plain_positional:
+                    continue
+                stmt = astutil.enclosing_stmt(pmap, call)
+                rebound: set[str] = set()
+                if isinstance(stmt, ast.Assign):
+                    for t in stmt.targets:
+                        for n in ast.walk(t):
+                            b = astutil.buffer_base(n) if isinstance(
+                                n, (ast.Name, ast.Attribute, ast.Subscript)
+                            ) else None
+                            if b:
+                                rebound.add(b)
+                call_nodes = {id(n) for n in ast.walk(call)}
+                end = (call.end_lineno or call.lineno, call.end_col_offset or 0)
+                for idx in info.donate_argnums:
+                    if idx >= len(call.args):
+                        continue
+                    base = astutil.buffer_base(call.args[idx])
+                    if base is None or base in rebound:
+                        continue
+                    use = self._first_use_after(fn, base, end, call_nodes)
+                    if use is not None:
+                        yield self.finding(
+                            ctx, use,
+                            f"'{base}' was donated to {info.name} "
+                            f"(donate_argnums={info.donate_argnums}) at line "
+                            f"{call.lineno} and read again here — the buffer "
+                            "is invalidated at dispatch; rebind the result "
+                            "or drop the donation",
+                        )
+
+    @staticmethod
+    def _first_use_after(
+        fn: ast.AST, base: str, end: tuple[int, int], exclude: set[int]
+    ) -> Optional[ast.AST]:
+        uses = []
+        rebinds = []
+        for n in astutil.walk_scope(fn):
+            if id(n) in exclude:
+                continue
+            pos = (getattr(n, "lineno", 0), getattr(n, "col_offset", 0))
+            if pos <= end:
+                continue
+            if isinstance(n, (ast.Name, ast.Attribute)):
+                if astutil.buffer_base(n) != base:
+                    continue
+                if isinstance(n.ctx, ast.Store):
+                    rebinds.append((pos, n))
+                else:
+                    uses.append((pos, n))
+        if not uses:
+            return None
+        first_use = min(uses)
+        if rebinds and min(rebinds)[0] < first_use[0]:
+            return None  # rebound before any read
+        return first_use[1]

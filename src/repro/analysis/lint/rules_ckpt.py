@@ -1,0 +1,70 @@
+"""Checkpoint durability rule.
+
+Historical bug (fixed in PR 6): ``ckpt/checkpoint.py`` wrote the npz
+payload and its JSON manifest to temp files and then ``os.replace``d both
+into place npz-first *with no durability barrier* — a crash (or just a
+power cut with dirty page cache) could publish a manifest that vouched for
+payload bytes that were never fsynced, so restore read stale or torn data
+while ``verify_checkpoint`` said the step was committed. The fixed protocol
+is payload-first: write payload, ``fsync``, ``os.replace``, fsync the
+directory, and only then build and publish the manifest the same way — the
+manifest publish is the commit point.
+
+`torn-publish` encodes the detectable core of that protocol: an
+``os.replace`` / ``os.rename`` whose destination looks like a commit record
+(manifest/meta/.json/index) appearing in a function with no ``os.fsync``
+call before it. A function that fsyncs *something* earlier at least ordered
+a durability barrier before its commit record; one that never fsyncs
+cannot possibly be crash-ordered.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.lint import astutil
+from repro.analysis.lint.core import Finding, FileContext, Rule, register
+
+# destination substrings that mark a rename as publishing a commit record
+MANIFEST_TOKENS = ("manifest", "meta", ".json", "index", "commit")
+
+RENAMES = {"os.replace", "os.rename", "pathlib.Path.replace"}
+
+
+@register
+class TornPublish(Rule):
+    name = "torn-publish"
+    summary = (
+        "manifest/metadata rename published with no fsync barrier earlier "
+        "in the function — a crash can commit a manifest for undurable bytes"
+    )
+
+    def run(self, module: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        imports = astutil.Imports(module)
+        for fn in astutil.functions(module):
+            calls = [
+                n for n in astutil.walk_scope(fn) if isinstance(n, ast.Call)
+            ]
+            fsync_lines = [
+                c.lineno
+                for c in calls
+                if imports.resolve(c.func) == "os.fsync"
+            ]
+            for c in calls:
+                if imports.resolve(c.func) not in RENAMES:
+                    continue
+                if len(c.args) < 2:
+                    continue
+                dst = ast.unparse(c.args[1]).lower()
+                if not any(tok in dst for tok in MANIFEST_TOKENS):
+                    continue
+                if any(line < c.lineno for line in fsync_lines):
+                    continue
+                yield self.finding(
+                    ctx, c,
+                    f"commit-record rename to '{ast.unparse(c.args[1])}' "
+                    "with no os.fsync barrier earlier in this function — "
+                    "the pre-PR 6 torn-checkpoint bug: make the payload "
+                    "durable (write + fsync + replace + dir fsync) BEFORE "
+                    "publishing the manifest that vouches for it",
+                )

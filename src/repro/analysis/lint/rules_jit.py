@@ -1,0 +1,334 @@
+"""Traced-context rules: what must not appear inside jit/scan bodies.
+
+Four rules share the :func:`astutil.jitted_contexts` view (functions the
+file jits + lax loop bodies):
+
+* `sort-in-loop` — PR 3 hit a real XLA:CPU miscompile where a sort consumed
+  inside a ``fori_loop`` under ``shard_map`` was hoisted as a loop-invariant
+  operand, producing wrong schedules on some devices; budgeted baselines
+  now use the sort-free ``baselines._rank_order``. Sorts also serialize the
+  loop on TPU. The rule rejects sort primitives in any lax loop body.
+* `host-sync-in-hot-loop` — ``.item()`` / ``float()`` / ``np.asarray`` on a
+  traced value blocks the async dispatch queue per step (and simply errors
+  under jit); the engine/sweep hot loops must stay device-resident.
+* `nonhashable-jit-static` — a list/dict/array passed for a static arg
+  raises at call time, and a static arg that varies per loop iteration
+  recompiles the program every call (the "why is the sweep slow" class).
+* `impure-scan-body` — closure mutation, attribute writes, or ``print``
+  inside a ``lax.scan`` body: traced once, silently wrong (or nondeterministic
+  across recompiles) ever after.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.lint import astutil
+from repro.analysis.lint.core import Finding, FileContext, Rule, register
+
+SORT_CALLS = {
+    "jax.numpy.sort",
+    "jax.numpy.argsort",
+    "jax.numpy.lexsort",
+    "jax.numpy.partition",
+    "jax.numpy.argpartition",
+    "jax.lax.sort",
+}
+
+# host-materialising calls: these force a device->host sync on traced values
+NUMPY_HOST_CALLS = {
+    "numpy.asarray",
+    "numpy.array",
+    "numpy.copy",
+    "numpy.percentile",
+    "numpy.median",
+    "numpy.quantile",
+    "numpy.histogram",
+    "numpy.save",
+    "numpy.savez",
+    "jax.device_get",
+}
+
+PY_SCALAR_CASTS = {"float", "int", "bool", "complex"}
+
+UNHASHABLE_LITERALS = (
+    ast.List,
+    ast.Dict,
+    ast.Set,
+    ast.ListComp,
+    ast.DictComp,
+    ast.SetComp,
+    ast.GeneratorExp,
+)
+UNHASHABLE_CALLS = {
+    "list",
+    "dict",
+    "set",
+    "bytearray",
+    "sorted",
+    "numpy.array",
+    "numpy.asarray",
+    "numpy.zeros",
+    "numpy.ones",
+    "numpy.arange",
+    "jax.numpy.array",
+    "jax.numpy.asarray",
+    "jax.numpy.zeros",
+    "jax.numpy.ones",
+    "jax.numpy.arange",
+}
+
+MUTATING_CONTAINER_METHODS = {
+    "append", "extend", "insert", "add", "update", "pop", "popitem",
+    "setdefault", "remove", "discard", "clear",
+}
+
+
+@register
+class SortInLoop(Rule):
+    name = "sort-in-loop"
+    summary = (
+        "jnp.sort/argsort inside a lax loop body — the PR 3 XLA:CPU "
+        "shard_map miscompile hoisted it as loop-invariant; keep sorts out "
+        "of loop bodies or rank sort-free"
+    )
+
+    def run(self, module: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        imports = astutil.Imports(module)
+        for body, prim in astutil.loop_bodies(module, imports):
+            for node in astutil.walk_scope(body):
+                if not isinstance(node, ast.Call):
+                    continue
+                cn = imports.resolve(node.func)
+                if cn in SORT_CALLS:
+                    yield self.finding(
+                        ctx, node,
+                        f"{cn.rsplit('.', 1)[-1]} inside a {prim} body: a "
+                        "sort consumed in a traced loop was miscompiled as "
+                        "loop-invariant on XLA:CPU under shard_map (PR 3) "
+                        "and serializes the loop elsewhere — hoist it out "
+                        "of the body or use a sort-free ranking",
+                    )
+
+
+@register
+class HostSyncInHotLoop(Rule):
+    name = "host-sync-in-hot-loop"
+    summary = (
+        ".item()/float()/np.asarray on traced values inside jit or lax "
+        "loop bodies — forces a host sync in the hot loop"
+    )
+
+    def run(self, module: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        imports = astutil.Imports(module)
+        for body, kind in astutil.jitted_contexts(module, imports):
+            params = astutil.param_names(body)
+            for node in astutil.walk_scope(body):
+                if not isinstance(node, ast.Call):
+                    continue
+                cn = imports.resolve(node.func)
+                if (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item"
+                    and not node.args
+                ):
+                    yield self.finding(
+                        ctx, node,
+                        f".item() inside a {kind} context forces a "
+                        "device->host sync (and fails under trace) — keep "
+                        "the value on device or move the read outside",
+                    )
+                elif cn in NUMPY_HOST_CALLS:
+                    yield self.finding(
+                        ctx, node,
+                        f"{cn} inside a {kind} context materialises a host "
+                        "array from traced values — use jnp equivalents in "
+                        "the traced body and convert outside it",
+                    )
+                elif cn in PY_SCALAR_CASTS and self._casts_param(node, params):
+                    yield self.finding(
+                        ctx, node,
+                        f"{cn}() applied to the traced argument "
+                        f"'{ast.unparse(node.args[0])}' inside a {kind} "
+                        "context — python scalar casts block on the device "
+                        "value (TracerConversionError under jit)",
+                    )
+
+    @staticmethod
+    def _casts_param(node: ast.Call, params: set[str]) -> bool:
+        if len(node.args) != 1:
+            return False
+        for n in ast.walk(node.args[0]):
+            if isinstance(n, ast.Name) and n.id in params:
+                return True
+        return False
+
+
+@register
+class NonhashableJitStatic(Rule):
+    name = "nonhashable-jit-static"
+    summary = (
+        "unhashable or per-call-varying value passed for a static jit "
+        "argument — TypeError at call time, or a recompile every call"
+    )
+
+    def run(self, module: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        imports = astutil.Imports(module)
+        jits = {
+            name: info
+            for name, info in astutil.jit_bindings(module, imports).items()
+            if info.static_argnums or info.static_argnames
+        }
+        if not jits:
+            return
+        for fn in astutil.functions(module):
+            pmap = astutil.parent_map(fn)
+            for call in astutil.walk_scope(fn):
+                if not isinstance(call, ast.Call):
+                    continue
+                info = jits.get(imports.resolve(call.func) or "")
+                if info is None or info.node is call.func:
+                    continue
+                loop_vars = self._loop_targets(pmap, call)
+                for arg, label in self._static_args(call, info):
+                    yield from self._check(ctx, imports, info, arg, label,
+                                           loop_vars)
+
+    @staticmethod
+    def _static_args(call: ast.Call, info: astutil.JitInfo):
+        for idx in info.static_argnums:
+            if idx < len(call.args) and not isinstance(
+                call.args[idx], ast.Starred
+            ):
+                yield call.args[idx], f"static_argnums[{idx}]"
+        names = set(info.static_argnames)
+        for kw in call.keywords:
+            if kw.arg in names:
+                yield kw.value, f"static '{kw.arg}'"
+
+    @staticmethod
+    def _loop_targets(pmap, node) -> set[str]:
+        """Targets of enclosing *numeric* for-loops (range/enumerate): a
+        static arg varying with those is unbounded recompilation. Iterating
+        a small fixed tuple (e.g. per-algorithm dispatch) is a deliberate,
+        bounded compile set and is not flagged."""
+        out: set[str] = set()
+        cur = pmap.get(id(node))
+        while cur is not None:
+            if isinstance(cur, ast.For) and isinstance(cur.iter, ast.Call):
+                fname = cur.iter.func
+                if isinstance(fname, ast.Name) and fname.id in (
+                    "range", "enumerate"
+                ):
+                    out.update(
+                        n.id for n in ast.walk(cur.target)
+                        if isinstance(n, ast.Name)
+                    )
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                break
+            cur = pmap.get(id(cur))
+        return out
+
+    def _check(self, ctx, imports, info, arg, label, loop_vars):
+        cn = imports.resolve(arg.func) if isinstance(arg, ast.Call) else None
+        if isinstance(arg, UNHASHABLE_LITERALS) or cn in UNHASHABLE_CALLS:
+            yield self.finding(
+                ctx, arg,
+                f"unhashable value '{ast.unparse(arg)[:60]}' passed for "
+                f"{label} of {info.name} — static jit arguments must be "
+                "hashable (tuples, strings, ints); arrays belong in traced "
+                "positions",
+            )
+            return
+        varying = {
+            n.id for n in ast.walk(arg) if isinstance(n, ast.Name)
+        } & loop_vars
+        if varying:
+            yield self.finding(
+                ctx, arg,
+                f"{label} of {info.name} depends on loop variable(s) "
+                f"{sorted(varying)} — a new static value every iteration "
+                "recompiles the jitted program each call; trace it instead "
+                "or hoist the loop into the compiled computation",
+            )
+
+
+@register
+class ImpureScanBody(Rule):
+    name = "impure-scan-body"
+    summary = (
+        "python side effects (closure/attribute mutation, print) inside a "
+        "lax loop body — executed once at trace time, never per step"
+    )
+
+    def run(self, module: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        imports = astutil.Imports(module)
+        for body, prim in astutil.loop_bodies(module, imports):
+            local = astutil.param_names(body)
+            for node in astutil.walk_scope(body):
+                if isinstance(node, ast.Name) and isinstance(
+                    node.ctx, ast.Store
+                ):
+                    local.add(node.id)
+            for node in astutil.walk_scope(body):
+                yield from self._check_node(ctx, imports, node, prim, local)
+
+    def _check_node(self, ctx, imports, node, prim, local):
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            yield self.finding(
+                ctx, node,
+                f"{'global' if isinstance(node, ast.Global) else 'nonlocal'} "
+                f"rebinding inside a {prim} body runs once at trace time, "
+                "not per step — thread the value through the carry",
+            )
+            return
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (
+                node.targets if isinstance(node, ast.Assign) else [node.target]
+            )
+            for t in targets:
+                if isinstance(t, ast.Attribute):
+                    yield self.finding(
+                        ctx, node,
+                        f"attribute write '{ast.unparse(t)} = ...' inside a "
+                        f"{prim} body is a trace-time side effect — scan "
+                        "bodies must be pure; return the value in the carry",
+                    )
+                elif isinstance(t, ast.Subscript):
+                    base = astutil.buffer_base(t)
+                    if base is not None and base not in local:
+                        yield self.finding(
+                            ctx, node,
+                            f"subscript write to closed-over '{base}' inside "
+                            f"a {prim} body mutates the enclosing scope at "
+                            "trace time — use .at[].set() on a carried array",
+                        )
+            return
+        if isinstance(node, ast.Call):
+            cn = imports.resolve(node.func)
+            if cn == "print":
+                yield self.finding(
+                    ctx, node,
+                    f"print() inside a {prim} body executes once at trace "
+                    "time — use jax.debug.print for per-step output",
+                )
+                return
+            f = node.func
+            if (
+                isinstance(f, ast.Attribute)
+                and f.attr in MUTATING_CONTAINER_METHODS
+            ):
+                base = astutil.buffer_base(f.value)
+                # y.at[...].add/.set are jax *functional* updates, not
+                # container mutation
+                if base is not None and base.endswith(".at"):
+                    return
+                if base is not None and base not in local:
+                    yield self.finding(
+                        ctx, node,
+                        f"'{base}.{f.attr}(...)' inside a {prim} body "
+                        "mutates a closed-over container at trace time, not "
+                        "per step — accumulate through the scan carry/ys "
+                        "instead",
+                    )

@@ -1,0 +1,76 @@
+"""RNG stream-derivation rule.
+
+Historical bug (PR 3): ``trace.py`` seeded its spec/arrivals/works streams
+as ``seed``, ``seed + 1``, ``seed + 2``, so sweep seed ``s``'s arrival
+stream was bit-identical to seed ``s+1``'s spec stream — adjacent grid
+configs shared randomness and every cross-seed statistic was silently
+correlated. The fix (``trace.stream_rng``) derives streams with
+``np.random.SeedSequence(seed).spawn``; the device path uses
+``jax.random.fold_in(PRNGKey(seed), stream_index)``. This rule rejects the
+arithmetic scheme at the source: any ``seed ± k`` / ``seed * k`` expression
+feeding an RNG constructor.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.lint import astutil
+from repro.analysis.lint.core import Finding, FileContext, Rule, register
+
+# RNG entry points whose seed argument defines an independent stream
+RNG_CONSTRUCTORS = {
+    "jax.random.PRNGKey",
+    "jax.random.key",
+    "numpy.random.default_rng",
+    "numpy.random.seed",
+    "numpy.random.RandomState",
+    "numpy.random.SeedSequence",
+    "random.seed",
+    "random.Random",
+}
+
+_ARITH = (ast.Add, ast.Sub, ast.Mult)
+
+
+def _offset_arith(node: ast.expr) -> bool:
+    """True for +/-/* expressions mixing a variable with anything — the
+    ``seed + k`` shape. Pure-constant arithmetic is collision-free."""
+    if not (isinstance(node, ast.BinOp) and isinstance(node.op, _ARITH)):
+        return False
+    has_var = any(
+        isinstance(n, (ast.Name, ast.Attribute, ast.Subscript))
+        for n in ast.walk(node)
+    )
+    return has_var
+
+
+@register
+class RngOffsetDerivation(Rule):
+    name = "rng-offset-derivation"
+    summary = (
+        "seed arithmetic (seed+k / seed*k) feeding an RNG constructor — "
+        "derive streams with SeedSequence.spawn or jax.random.fold_in"
+    )
+
+    def run(self, module: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        imports = astutil.Imports(module)
+        for node in ast.walk(module):
+            if not isinstance(node, ast.Call):
+                continue
+            cn = imports.resolve(node.func)
+            if cn not in RNG_CONSTRUCTORS:
+                continue
+            exprs = list(node.args) + [
+                kw.value for kw in node.keywords if kw.arg in (None, "seed")
+            ]
+            for arg in exprs:
+                if _offset_arith(arg):
+                    yield self.finding(
+                        ctx, arg,
+                        f"'{ast.unparse(arg)}' derives an RNG stream by seed "
+                        f"arithmetic into {cn.rsplit('.', 1)[-1]}; offset "
+                        "seeds collide across runs (the PR 3 sweep-stream "
+                        "bug) — use np.random.SeedSequence(seed).spawn(n), "
+                        "a tuple seed, or jax.random.fold_in(key, k)",
+                    )

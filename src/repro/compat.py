@@ -1,13 +1,22 @@
-"""JAX API-drift shims.
+"""JAX API-drift shims and runtime sanitizers.
 
 ``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
 and renamed ``check_rep`` to ``check_vma`` along the way; this wrapper accepts
 the new-style call on either version. ``set_mesh`` falls back to the Mesh
 context manager that predates it. ``grid_mesh`` builds the 1-D
 all-local-devices mesh the sharded sweep engine lays grid axes over.
+
+The sanitizer half (``transfer_guard``, ``checking_leaks``,
+``CompilationCounter``) wraps the jax runtime facilities the test suite and
+benchmark gates use to catch the bug classes the static linter
+(``repro.analysis.lint``) checks for syntactically: implicit host<->device
+transfers inside hot paths, tracer leaks out of traced scopes, and silent
+per-call recompilation. Each wrapper degrades to a no-op on jax versions
+that lack the underlying API, so tier-1 stays green across the shim matrix.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional, Sequence
 
 import jax
@@ -51,3 +60,94 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
     return _experimental_shard_map(
         f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
     )
+
+
+# ----------------------------------------------------- runtime sanitizers --
+
+
+def transfer_guard(policy: str = "disallow"):
+    """``jax.transfer_guard(policy)``, or a null context on old jax.
+
+    Under ``"disallow"`` jax raises on *implicit* host<->device transfers
+    (a numpy array silently fed to a jitted function, ``float()`` on a
+    device array) while explicit ``jax.device_put`` / ``jnp.asarray`` /
+    ``jax.device_get`` stay allowed — exactly the line the
+    ``host-sync-in-hot-loop`` lint rule draws syntactically.
+    """
+    tg = getattr(jax, "transfer_guard", None)
+    if tg is None:
+        return contextlib.nullcontext()
+    return tg(policy)
+
+
+def checking_leaks():
+    """``jax.checking_leaks()``, or a null context on old jax.
+
+    Errors when a tracer escapes its trace — the runtime face of the
+    ``impure-scan-body`` lint rule.
+    """
+    cl = getattr(jax, "checking_leaks", None)
+    if cl is None:
+        return contextlib.nullcontext()
+    return cl()
+
+
+# jax.monitoring has no unregister API, so a single process-wide listener is
+# installed lazily and left in place; CompilationCounter reads deltas of the
+# running total. The event fires once per real XLA backend compile and not
+# on jit-cache hits, which is what makes "compiled exactly once per shape"
+# assertable.
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_compile_events = 0
+_listener_installed = False
+
+
+def _on_compile_event(event: str, duration: float, **kwargs) -> None:
+    global _compile_events
+    if event == _COMPILE_EVENT:
+        _compile_events += 1
+
+
+def _install_compile_listener() -> bool:
+    global _listener_installed
+    if _listener_installed:
+        return True
+    try:
+        from jax import monitoring
+
+        monitoring.register_event_duration_secs_listener(_on_compile_event)
+    except Exception:
+        return False
+    _listener_installed = True
+    return True
+
+
+def backend_compile_count() -> int:
+    """Running total of XLA backend compiles seen since listener install."""
+    _install_compile_listener()
+    return _compile_events
+
+
+class CompilationCounter:
+    """Counts XLA backend compiles inside a ``with`` block.
+
+    >>> with CompilationCounter() as c:
+    ...     f(x)          # warm call
+    >>> c.count           # 0 if f hit the jit cache, >=1 if it recompiled
+
+    ``supported`` is False when jax.monitoring is unavailable; callers
+    gating CI on ``count`` should skip (not pass) in that case.
+    """
+
+    count: int = 0
+    supported: bool = False
+
+    def __enter__(self) -> "CompilationCounter":
+        self.supported = _install_compile_listener()
+        self._start = _compile_events
+        self.count = 0
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.count = _compile_events - self._start
+        return False

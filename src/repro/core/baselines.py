@@ -109,13 +109,20 @@ def _budgeted_fill(
         # preference: score desc; natural index order as tiebreak
         pref = node_score_sign * util - 1e-6 * jnp.arange(R)
         pref = jnp.where(mask[l] > 0, pref, -_BIG)
-        order = jnp.argsort(-pref)  # best node first
+        # Loop-VARYING sort: pref depends on the carried rem, so XLA cannot
+        # hoist it the way the PR 3 loop-invariant port-order sort was
+        # miscompiled; shard_map == vmap stays pinned bitwise over this path
+        # by tests/test_sweep_sharded.py, and a sort-free O(R^2) ranking is
+        # infeasible at dryrun scale (R=131072).
+        order = jnp.argsort(-pref)  # lint: disable=sort-in-loop
         take = jnp.minimum(a[l][None, :], rem[order]) * mask[l][order][:, None]
         cum = jnp.cumsum(take, axis=0)  # (R, K) cumulative if all taken
         budget = w[l] * a[l]  # (K,)
         allowed = jnp.clip(budget[None, :] - (cum - take), 0.0, take)
         allowed = allowed * active
-        inv = jnp.argsort(order)
+        # invert the permutation without a second sort (argsort of a
+        # permutation == its inverse; the scatter is exact and cheaper)
+        inv = jnp.zeros_like(order).at[order].set(jnp.arange(R))
         got = allowed[inv]  # back to node index order, (R, K)
         y = y.at[l].add(got)
         rem = rem - got

@@ -121,7 +121,7 @@ def test_fill_equals_projection_on_saturating_rows(seed):
     """When the inequality projection lands ON the capacity face (demand
     exceeds capacity), fill_rows_to_capacity and project_rows_sorted solve
     the same breakpoint program — results must agree to fp tolerance."""
-    rng = np.random.default_rng(100 + seed)
+    rng = np.random.default_rng((100, seed))
     N, L = 16, 8
     z = rng.uniform(0.5, 5.0, (N, L))  # strictly positive demand
     a = rng.uniform(0.5, 4.0, (N, L))

@@ -21,7 +21,7 @@ from repro.kernels.proj_bisect import proj_bisect
 @pytest.mark.parametrize("N,L", [(4, 8), (16, 24), (33, 130), (8, 1)])
 @pytest.mark.parametrize("dtype", [jnp.float32])
 def test_proj_bisect_shapes(N, L, dtype):
-    key = jax.random.PRNGKey(N * 100 + L)
+    key = jax.random.fold_in(jax.random.PRNGKey(N), L)
     kz, ka, km, kc = jax.random.split(key, 4)
     z = (jax.random.normal(kz, (N, L)) * 5).astype(dtype)
     a = jax.random.uniform(ka, (N, L), minval=0.1, maxval=4.0).astype(dtype)
@@ -86,7 +86,7 @@ def test_proj_bisect_reduced_iters_accuracy():
 # --------------------------------------------------------------- oga step --
 @pytest.mark.parametrize("N,L", [(6, 10), (24, 48)])
 def test_oga_step_fused_vs_ref(N, L):
-    key = jax.random.PRNGKey(N + L)
+    key = jax.random.fold_in(jax.random.PRNGKey(N), L)
     ks = jax.random.split(key, 7)
     y = jax.random.uniform(ks[0], (N, L), maxval=2.0)
     a = jax.random.uniform(ks[1], (N, L), minval=0.5, maxval=3.0)
@@ -195,7 +195,7 @@ def test_oga_step_fused_equals_core_pipeline():
     [(1, 128, 4, 2, 64), (2, 256, 4, 1, 64), (1, 256, 8, 8, 128), (2, 512, 2, 1, 64)],
 )
 def test_flash_attention_shapes(B, S, H, G, hd):
-    key = jax.random.PRNGKey(B * S)
+    key = jax.random.fold_in(jax.random.PRNGKey(B), S)
     kq, kk, kv = jax.random.split(key, 3)
     q = jax.random.normal(kq, (B, S, H, hd))
     k = jax.random.normal(kk, (B, S, G, hd))

@@ -136,7 +136,7 @@ def test_sortscan_wide_lanes_match_exact(seed):
     that only manifests at large 2L would surface here, not in the
     narrow-L property run. One fixed shape per L, so the jit cache is
     reused across seeds."""
-    rng = np.random.default_rng(100 + seed)
+    rng = np.random.default_rng((100, seed))
     for L in (proj.SORTSCAN_MIN_L, proj.SORTSCAN_MIN_L + 37):
         N = 8
         z = rng.normal(0, 5, (N, L)).astype(np.float32)

@@ -16,7 +16,7 @@ def _setup(seed=0, **kw):
     spec = trace.build_spec(cfg)
     key = jax.random.PRNGKey(seed)
     y = graph.random_feasible_decision(spec, key)
-    x = (jax.random.uniform(jax.random.PRNGKey(seed + 1), (spec.L,)) < 0.7).astype(
+    x = (jax.random.uniform(jax.random.fold_in(key, 1), (spec.L,)) < 0.7).astype(
         jnp.float32
     )
     return spec, x, y

@@ -29,6 +29,12 @@ def main() -> None:
         "(projection + fused-step timings, incl. the backend step A/B)",
     )
     ap.add_argument(
+        "--faults-json", type=str, default="BENCH_faults.json",
+        help="where the fault-injection section writes its machine-readable "
+        "records (goodput/wasted-work/recovery per algorithm x regime + "
+        "the degradation summary CI gates on)",
+    )
+    ap.add_argument(
         "--regret-json", type=str, default="BENCH_regret.json",
         help="where the Thm. 1 section writes its machine-readable records "
         "(per utility x regime: growth exponent + bootstrap CI, R_T vs "
@@ -39,6 +45,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_contention,
+        bench_faults,
         bench_generality,
         bench_hparams,
         bench_kernels,
@@ -71,6 +78,12 @@ def main() -> None:
             json.dump(records, f, indent=2)
         print(f"# wrote {len(records)} regret records to {args.regret_json}")
 
+    def faults_section():
+        records = bench_faults.run(quick)
+        with open(args.faults_json, "w") as f:
+            json.dump(records, f, indent=2)
+        print(f"# wrote {len(records)} fault records to {args.faults_json}")
+
     sections = [
         ("fig2_reward", lambda: bench_reward.run(T=1000 if quick else 8000)),
         ("tab3_generality", lambda: bench_generality.run(quick)),
@@ -82,6 +95,7 @@ def main() -> None:
         ("thm1_regret", regret_section),
         ("sweep_throughput", sweep_section),
         ("lifecycle_jct", lambda: bench_lifecycle.run(quick)),
+        ("lifecycle_faults", faults_section),
         ("kernels", kernels_section),
         ("roofline", bench_roofline.run),
     ]

@@ -74,3 +74,26 @@ for name, r in life.items():
     print(f"  {name:12s} jct={m['jct_mean']:.2f} (p99 {m['jct_p99']:.1f}) "
           f"slowdown={m['slowdown_mean']:.2f} util={m['utilization']:.3f} "
           f"completed={m['completed']:.0f}")
+
+# --- fault injection: failures, evictions, retry/backoff ------------------
+# (docs/lifecycle.md "Faults, evictions, and retries". cfg.faults seeds a
+# (T, K) capacity-multiplier stream; capacity drops evict marginal jobs,
+# which retry with capped exponential backoff under lifecycle.FaultPolicy.
+# A fault-free config still runs the pre-fault program bitwise.)
+from repro.sched import lifecycle
+
+fault_cfg = dataclasses.replace(
+    life_cfg,
+    faults=trace.FaultConfig(fail_rate=0.02, fail_frac=0.3, repair_mean=40.0),
+)
+faulted = run_all(
+    fault_cfg, mode="lifecycle", algorithms=("ogasched", "fairness"),
+    fault_policy=lifecycle.FaultPolicy(max_retries=3, preserve_work=True),
+)
+print("\nfault-injected lifecycle (server failures, exponential repair):")
+for name, r in faulted.items():
+    m = r.lifecycle
+    clean = life[name].lifecycle
+    print(f"  {name:12s} goodput={m['goodput']:.1f} "
+          f"(clean {clean['goodput']:.1f}) wasted={m['wasted_work']:.0f} "
+          f"evictions={m['evictions']:.0f} drops={m['fault_drops']:.0f}")

@@ -22,6 +22,9 @@ donation-use-after-dispatch sweep chunk donation (PR 4): donated buffers die
                             at dispatch
 impure-scan-body            scan bodies must be pure or trace-time effects
                             run once, not per step
+unvalidated-capacity-mask   fault-injected lifecycle: capacity minus usage
+                            with no clip guard goes negative when capacity
+                            collapses below held allocations (PR 9)
 ==========================  =================================================
 
 Usage::
@@ -49,6 +52,7 @@ from repro.analysis.lint.core import (  # noqa: F401
 # importing the rule modules populates the registry
 from repro.analysis.lint import (  # noqa: E402,F401
     rules_buffers,
+    rules_capacity,
     rules_ckpt,
     rules_jit,
     rules_rng,

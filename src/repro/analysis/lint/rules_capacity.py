@@ -1,0 +1,108 @@
+"""Residual-capacity feasibility rule.
+
+The fault-injected lifecycle executes against a *surviving* capacity
+``c_t = c * fault_multiplier`` that can collapse below what running jobs
+already hold, so the residual ``c - used`` is no longer non-negative by
+construction. An unguarded subtraction ships a negative "capacity"
+downstream — the water-filling and projection kernels divide by it, and a
+negative residual turns into NaN allocations three calls away from the
+bug (the reason ``graph.residual_capacity`` floors at zero and the
+eviction rule re-establishes feasibility before any admission).
+
+This rule rejects the pattern at the source: a subtraction FROM a
+capacity-named operand (``c``, ``cap``/``capacity`` variants, ``c_*``
+like ``c_t`` / ``c_res``, or an attribute such as ``spec.c``) that is not
+wrapped in a clip/floor guard (``jnp.maximum`` / ``jnp.clip`` /
+``jnp.where`` or the numpy twins) and is not part of a comparison (a
+feasibility *check* like ``c - used >= -tol`` reads the sign; it does not
+ship the residual).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.lint import astutil
+from repro.analysis.lint.core import Finding, FileContext, Rule, register
+
+# calls that bound the residual below (or select away the negative branch)
+GUARDS = {
+    "jax.numpy.maximum",
+    "jax.numpy.clip",
+    "jax.numpy.where",
+    "numpy.maximum",
+    "numpy.clip",
+    "numpy.where",
+    "jax.nn.relu",
+}
+
+_CAP_EXACT = {"c", "cap", "caps", "capacity", "capacities"}
+_CAP_SUFFIX = ("_cap", "_caps", "_capacity")
+
+
+def _capacity_name(node: ast.expr) -> Optional[str]:
+    """Terminal identifier of a capacity-like operand, else None: peels
+    subscripts (``c[None]``) and reads the attribute name (``spec.c``)."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute):
+        name = node.attr
+    elif isinstance(node, ast.Name):
+        name = node.id
+    else:
+        return None
+    low = name.lower()
+    if low in _CAP_EXACT or low.startswith("c_") or low.endswith(_CAP_SUFFIX):
+        return name
+    return None
+
+
+def _has_variable(node: ast.expr) -> bool:
+    return any(
+        isinstance(n, (ast.Name, ast.Attribute)) for n in ast.walk(node)
+    )
+
+
+@register
+class UnvalidatedCapacityMask(Rule):
+    name = "unvalidated-capacity-mask"
+    summary = (
+        "capacity minus usage without a clip/feasibility guard — residuals "
+        "go negative under capacity faults; wrap in jnp.maximum(..., 0.0) "
+        "or jnp.clip"
+    )
+
+    def run(self, module: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        imports = astutil.Imports(module)
+        covered: set[int] = set()
+        for node in ast.walk(module):
+            is_guard = (
+                isinstance(node, ast.Call)
+                and imports.resolve(node.func) in GUARDS
+            )
+            # comparisons/asserts READ the residual's sign (feasibility
+            # checks); only a residual that flows onward needs the floor
+            if is_guard or isinstance(node, (ast.Compare, ast.Assert)):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.BinOp) and isinstance(
+                        sub.op, ast.Sub
+                    ):
+                        covered.add(id(sub))
+        for node in ast.walk(module):
+            if not (
+                isinstance(node, ast.BinOp)
+                and isinstance(node.op, ast.Sub)
+                and id(node) not in covered
+            ):
+                continue
+            cap = _capacity_name(node.left)
+            if cap is None or not _has_variable(node.right):
+                continue
+            yield self.finding(
+                ctx, node,
+                f"'{ast.unparse(node)}' subtracts usage from capacity "
+                f"'{cap}' with no clip/feasibility guard; under capacity "
+                "faults the residual goes negative and poisons downstream "
+                "water-filling/projection — wrap in jnp.maximum(..., 0.0) "
+                "or jnp.clip, or guard with jnp.where",
+            )

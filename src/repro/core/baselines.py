@@ -105,6 +105,9 @@ def _budgeted_fill(
         y, rem = carry
         l = port_order[i]
         active = x[l] * 1.0
+        # rem starts at c and only shrinks (take is clipped to rem), so
+        # c - rem is the consumed amount, >= 0 by loop invariant even when
+        # c is a fault-collapsed residual  # lint: disable=unvalidated-capacity-mask
         util = jnp.mean((c - rem) / jnp.maximum(c, 1e-9), axis=1)  # (R,)
         # preference: score desc; natural index order as tiebreak
         pref = node_score_sign * util - 1e-6 * jnp.arange(R)

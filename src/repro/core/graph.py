@@ -84,24 +84,42 @@ def zeros_like_decision(spec: ClusterSpec) -> jax.Array:
     return jnp.zeros((spec.L, spec.R, spec.K), dtype=spec.a.dtype)
 
 
-def residual_capacity(spec: ClusterSpec, held: jax.Array) -> jax.Array:
+def residual_capacity(
+    spec: ClusterSpec,
+    held: jax.Array,
+    capacity: Optional[jax.Array] = None,
+) -> jax.Array:
     """c - sum_l held_l, floored at 0: capacity left for new admissions.
 
     ``held`` is an (L, R, K) occupancy tensor (resources granted to jobs that
-    are still executing, sched.lifecycle). The floor guards against small
-    negative residuals from accumulated float error in long simulations.
+    are still executing, sched.lifecycle). ``capacity`` overrides the
+    nominal ``spec.c`` with an effective (R, K) capacity — the fault-
+    injected lifecycle nets admissions against the slot's *surviving*
+    capacity ``c * fault_multiplier`` instead of the nominal one. The floor
+    guards against small negative residuals from accumulated float error in
+    long simulations, and — under faults — against held allocations
+    legitimately exceeding a freshly collapsed capacity before eviction
+    settles.
     """
+    c = spec.c if capacity is None else capacity
     used = jnp.sum(held * spec.mask[:, :, None], axis=0)  # (R, K)
-    return jnp.maximum(spec.c - used, 0.0)
+    return jnp.maximum(c - used, 0.0)
 
 
-def residual_spec(spec: ClusterSpec, held: jax.Array) -> ClusterSpec:
-    """The same bipartite problem with capacities netted by ``held``.
+def residual_spec(
+    spec: ClusterSpec,
+    held: jax.Array,
+    capacity: Optional[jax.Array] = None,
+) -> ClusterSpec:
+    """The same bipartite problem with capacities netted by ``held``
+    (optionally from an effective ``capacity`` — see residual_capacity).
 
     Traced-safe (c is a pytree leaf), so per-slot residual specs can be built
     inside lax.scan bodies and under vmap.
     """
-    return dataclasses.replace(spec, c=residual_capacity(spec, held))
+    return dataclasses.replace(
+        spec, c=residual_capacity(spec, held, capacity)
+    )
 
 
 def random_feasible_decision(spec: ClusterSpec, key: jax.Array) -> jax.Array:

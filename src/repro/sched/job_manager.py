@@ -56,8 +56,15 @@ def templates_from_dryrun(records: dict) -> list[JobTemplate]:
 def build_cluster(
     jobs: list[JobTemplate], n_hosts: int = 128, seed: int = 0
 ) -> ClusterSpec:
-    """Bipartite spec: hosts with 4 chips / 64GB HBM / ICI / CPU / DRAM."""
-    rng = np.random.default_rng(seed)
+    """Bipartite spec: hosts with 4 chips / 64GB HBM / ICI / CPU / DRAM.
+
+    Randomness comes from the repo-wide SeedSequence stream discipline
+    (trace.stream_rng, stream "cluster"), NOT a raw default_rng(seed):
+    raw seeding made build_cluster(seed=s) share bits with any other
+    component seeded s — the exact collision class the trace streams were
+    split to kill (tests/test_trace.py).
+    """
+    rng = trace.stream_rng(seed, "cluster")
     L, K = len(jobs), len(RES)
     cap = np.array([4.0, 64.0, 16.0, 96.0, 256.0, 100.0])
     c = cap[None, :] * rng.uniform(0.9, 1.1, (n_hosts, K))

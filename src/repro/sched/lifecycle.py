@@ -12,14 +12,22 @@ and composes with both OGA backends (kernels.ops).
 State machine per port (one job in service per port, FIFO queue behind it):
 
     arrival --push--> QUEUED --admit (port idle)--> RUNNING --drain--> DONE
-        +--queue full--> DROPPED
+        +--queue full--> DROPPED      RUNNING --evict--> QUEUED (backoff)
+                                         +--retry budget spent--> DROPPED
 
-Slot order (one ``_step``): enqueue arrivals -> admit queue heads on idle
-ports -> allocate against *residual* capacity (graph.residual_capacity) ->
-collect admission reward -> service all running jobs at their
+Slot order (one ``_step``): apply the slot's fault multiplier (effective
+capacity ``c_t = c * f_t``) and evict the marginal in-service jobs that no
+longer fit (see ``_evict`` for the documented, jit-safe rule; evictions
+re-queue with capped exponential backoff and a bounded retry budget) ->
+enqueue arrivals -> admit *ready* queue heads on idle ports -> allocate
+against the *surviving residual* capacity (graph.residual_capacity against
+``c_t``) -> collect admission reward -> service all running jobs at their
 utility-derived rate (reward.service_rates on the held allocation) ->
 depart drained jobs, freeing capacity -> policy update (OGA ascent on the
-admitted indicator).
+admitted indicator). Without a fault stream (``faults=None``) the fault
+blocks are skipped entirely and every slot reduces bitwise to the
+pre-fault semantics (tests/test_lifecycle_faults.py pins an all-ones
+fault stream against ``faults=None`` as well).
 
 The allocation a job receives is the policy's proposal projected onto the
 residual-capacity polytope, so ``held + newly-allocated <= c`` holds by
@@ -60,6 +68,35 @@ ALL_ALGORITHMS = ("ogasched",) + baselines.ALL_BASELINES
 # slot (duration-1 jobs are the slot-mode reduction, not zero-duration).
 WORK_FLOOR = 1e-6
 
+# Feasibility slack of the eviction rule: an in-service prefix "fits" the
+# surviving capacity up to this absolute + relative tolerance, so float
+# accumulation over long scans (held sums reassociated by the prefix
+# einsum) can never evict a job a genuine capacity drop would have kept —
+# real fault events remove >= a few percent of c, orders of magnitude
+# above this slack.
+FEAS_TOL = 1e-4
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """How the lifecycle reacts to capacity loss (jit-static, hashable).
+
+    backoff_base:  re-queue delay of a job's FIRST retry, in slots; retry
+                   n waits ``min(backoff_base * 2**(n-1), backoff_cap)``
+                   (capped exponential backoff).
+    backoff_cap:   upper bound of the backoff delay, in slots.
+    max_retries:   evictions a job survives; the (max_retries+1)-th
+                   eviction drops it (counted in ``rdropped``).
+    preserve_work: True re-queues the job with its *remaining* work
+                   (checkpointed progress); False restarts it from its full
+                   size, counting the lost progress as wasted work.
+    """
+
+    backoff_base: float = 2.0
+    backoff_cap: float = 64.0
+    max_retries: int = 3
+    preserve_work: bool = True
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -70,10 +107,17 @@ class LifecycleState:
     remaining: (L,) work left for the in-service job; 0 <=> port idle.
     svc_arr:   (L,) arrival slot of the in-service job (JCT anchor).
     svc_start: (L,) admission slot of the in-service job (slowdown anchor).
+    svc_work:  (L,) total work of the in-service job (restart/wasted-work
+               anchor under evictions).
+    svc_retry: (L,) evictions the in-service job has survived so far.
     q_work:    (L, Q) FIFO of queued job sizes (0-padded past q_len).
     q_arr:     (L, Q) FIFO of queued arrival slots.
+    q_ready:   (L, Q) FIFO of earliest-admission slots (backoff gates).
+    q_retry:   (L, Q) FIFO of per-job eviction counts.
     q_len:     (L,) queue occupancy.
     dropped:   () cumulative arrivals rejected by a full queue.
+    rdropped:  () cumulative evicted jobs dropped (retry budget spent or
+               re-queue refused by a full queue).
     y:         (L, R, K) OGA decision (unused zeros for heuristics).
     eta:       () OGA learning rate (decayed per slot, as in slot mode).
     t:         () slot counter.
@@ -83,10 +127,15 @@ class LifecycleState:
     remaining: jax.Array
     svc_arr: jax.Array
     svc_start: jax.Array
+    svc_work: jax.Array
+    svc_retry: jax.Array
     q_work: jax.Array
     q_arr: jax.Array
+    q_ready: jax.Array
+    q_retry: jax.Array
     q_len: jax.Array
     dropped: jax.Array
+    rdropped: jax.Array
     y: jax.Array
     eta: jax.Array
     t: jax.Array
@@ -109,6 +158,11 @@ class LifecycleTrace:
     running:   (T, L) port busy at the end of the slot.
     q_depth:   (T, L) queue occupancy at the end of the slot.
     dropped:   (T,) cumulative queue-full rejections.
+    evicted:   (T, L) in-service job evicted by a capacity drop this slot.
+    wasted:    (T,) work units of progress discarded this slot (evicted
+               jobs that were dropped, or re-queued under restart-from-zero).
+    rdropped:  (T,) cumulative evicted-job drops (retry budget / full queue).
+    work_done: (T, L) work units drained this slot (goodput numerator).
     """
 
     rewards: jax.Array
@@ -120,6 +174,10 @@ class LifecycleTrace:
     running: jax.Array
     q_depth: jax.Array
     dropped: jax.Array
+    evicted: jax.Array
+    wasted: jax.Array
+    rdropped: jax.Array
+    work_done: jax.Array
 
 
 def init_state(
@@ -135,14 +193,103 @@ def init_state(
         remaining=jnp.zeros((L,), dtype),
         svc_arr=jnp.zeros((L,), jnp.int32),
         svc_start=jnp.zeros((L,), jnp.int32),
+        svc_work=jnp.zeros((L,), dtype),
+        svc_retry=jnp.zeros((L,), jnp.int32),
         q_work=jnp.zeros((L, queue_depth), dtype),
         q_arr=jnp.zeros((L, queue_depth), jnp.int32),
+        q_ready=jnp.zeros((L, queue_depth), jnp.int32),
+        q_retry=jnp.zeros((L, queue_depth), jnp.int32),
         q_len=jnp.zeros((L,), jnp.int32),
         dropped=jnp.zeros((), jnp.int32),
+        rdropped=jnp.zeros((), jnp.int32),
         y=graph.zeros_like_decision(spec) if y0 is None else y0,
         eta=jnp.asarray(eta0, dtype),
         t=jnp.zeros((), jnp.int32),
     )
+
+
+def _evict(
+    spec: ClusterSpec,
+    state: LifecycleState,
+    c_t: jax.Array,
+    t: jax.Array,
+    policy: FaultPolicy,
+    queue_depth: int,
+):
+    """Evict the marginal in-service jobs that no longer fit ``c_t``.
+
+    The documented, jit-safe rule: rank in-service jobs by ascending
+    remaining work (stable, index tiebreak — the SRPT order, so the jobs
+    closest to completion are kept and expected wasted work is minimised)
+    and keep the maximal prefix whose cumulative held allocation fits the
+    surviving capacity elementwise, within FEAS_TOL slack. Usage is
+    non-negative, so the cumulative sums are monotone in rank and the kept
+    set is a genuine prefix. The ranking is the sort-free O(L^2) pairwise
+    comparison (cf. baselines._rank_order) — no sort primitive enters the
+    scan body (the PR 3 shard_map miscompile class).
+
+    Evicted jobs re-queue at their own port's tail with retry count n+1,
+    earliest-admission slot ``t + min(backoff_base * 2**n, backoff_cap)``
+    (capped exponential backoff), and either their remaining work
+    (``policy.preserve_work``) or their full size (restart-from-zero).
+    Jobs whose retry budget is spent — or whose queue is full — are
+    dropped (``rdropped``); their drained progress counts as wasted work,
+    as does the progress of every restart-from-zero re-queue.
+    """
+    L = spec.L
+    dtype = spec.a.dtype
+    in_svc = state.remaining > 0
+    idx = jnp.arange(L)
+    rem_key = jnp.where(in_svc, state.remaining, jnp.inf)
+    before_eq = (
+        (rem_key[None, :] < rem_key[:, None])
+        | ((rem_key[None, :] == rem_key[:, None])
+           & (idx[None, :] <= idx[:, None]))
+    )  # (L, L): job j at or before job l in the keep order
+    held_m = state.held * spec.mask[:, :, None]
+    cum = jnp.einsum(
+        "lj,jrk->lrk", before_eq.astype(dtype), held_m
+    )  # (L, R, K) cumulative usage of the rank-<=l prefix
+    slack = FEAS_TOL * (1.0 + c_t)
+    fits = jnp.all(cum <= (c_t + slack)[None], axis=(1, 2))
+    evict = in_svc & ~fits
+
+    progress = jnp.maximum(state.svc_work - state.remaining, 0.0)
+    n_retry = state.svc_retry + 1
+    exhausted = n_retry > policy.max_retries
+    can_rq = evict & ~exhausted & (state.q_len < queue_depth)
+    delay = jnp.minimum(
+        policy.backoff_base * jnp.exp2((n_retry - 1).astype(dtype)),
+        policy.backoff_cap,
+    ).astype(jnp.int32)
+    w_rq = (
+        jnp.maximum(state.remaining, WORK_FLOOR) if policy.preserve_work
+        else state.svc_work
+    )
+    tail_f = jax.nn.one_hot(state.q_len, queue_depth, dtype=dtype)
+    tail_i = jax.nn.one_hot(state.q_len, queue_depth, dtype=jnp.int32)
+    rq = can_rq[:, None]
+    q_work = jnp.where(rq, state.q_work + tail_f * w_rq[:, None],
+                       state.q_work)
+    q_arr = jnp.where(rq, state.q_arr + tail_i * state.svc_arr[:, None],
+                      state.q_arr)
+    q_ready = jnp.where(rq, state.q_ready + tail_i * (t + delay)[:, None],
+                        state.q_ready)
+    q_retry = jnp.where(rq, state.q_retry + tail_i * n_retry[:, None],
+                        state.q_retry)
+    q_len = state.q_len + can_rq.astype(jnp.int32)
+    rq_drop = evict & ~can_rq
+    rdropped = state.rdropped + jnp.sum(rq_drop).astype(jnp.int32)
+    lost = rq_drop if policy.preserve_work else evict
+    wasted_t = jnp.sum(progress * lost.astype(dtype))
+
+    return dataclasses.replace(
+        state,
+        held=jnp.where(evict[:, None, None], 0.0, state.held),
+        remaining=jnp.where(evict, 0.0, state.remaining),
+        q_work=q_work, q_arr=q_arr, q_ready=q_ready, q_retry=q_retry,
+        q_len=q_len, rdropped=rdropped,
+    ), evict, wasted_t
 
 
 def _step(
@@ -150,6 +297,7 @@ def _step(
     state: LifecycleState,
     x_t: jax.Array,
     w_t: jax.Array,
+    f_t,
     *,
     algorithm: str,
     decay,
@@ -157,12 +305,32 @@ def _step(
     backend: str,
     step_w,
     operands,
+    fault_policy: FaultPolicy,
 ):
     """One slot of the lifecycle state machine; returns (state', events)."""
     L = spec.L
     dtype = spec.a.dtype
     queue_depth = state.q_work.shape[1]
     t = state.t
+
+    # -- faults: surviving capacity + eviction of jobs that no longer fit --
+    # f_t is None (no fault stream: the pre-fault program, bitwise) or the
+    # slot's (K,) capacity multiplier. Size-aware mode is fully malleable
+    # (the whole allocation is rebalanced below against c_t every slot), so
+    # nothing is "held" across the drop and eviction does not apply.
+    if f_t is None:
+        c_t = None
+        evict = jnp.zeros((L,), bool)
+        wasted_t = jnp.zeros((), dtype)
+    else:
+        c_t = spec.c * f_t[None, :]
+        if algorithm in baselines.SIZE_AWARE:
+            evict = jnp.zeros((L,), bool)
+            wasted_t = jnp.zeros((), dtype)
+        else:
+            state, evict, wasted_t = _evict(
+                spec, state, c_t, t, fault_policy, queue_depth
+            )
 
     # -- enqueue arrivals (x is treated as an indicator: <=1 job/port/slot) --
     arrive = x_t > 0
@@ -172,18 +340,34 @@ def _step(
     tail = jax.nn.one_hot(state.q_len, queue_depth, dtype=dtype)  # (L, Q)
     q_work = state.q_work + tail * (w_t * pushf)[:, None]
     q_arr = state.q_arr + (tail * pushf[:, None]).astype(jnp.int32) * t
+    # arrivals are ready immediately (backoff gates only re-queued jobs)
+    # and start with a zero retry count, so q_retry is untouched by a push
+    q_ready = state.q_ready + (tail * pushf[:, None]).astype(jnp.int32) * t
+    q_retry = state.q_retry
     q_len = state.q_len + push.astype(jnp.int32)
     dropped = state.dropped + jnp.sum(arrive & ~can_q).astype(jnp.int32)
 
-    # -- admit the queue head wherever the port is idle --
+    # -- admit the queue head wherever the port is idle (and, under faults,
+    # the head's backoff window has passed — the FIFO head gates the queue) --
     idle = state.remaining <= 0
     admit = idle & (q_len > 0)
+    if f_t is not None:
+        admit = admit & (q_ready[:, 0] <= t)
     new_work = jnp.maximum(q_work[:, 0], WORK_FLOOR)
     new_arr = q_arr[:, 0]
+    new_retry = q_retry[:, 0]
     shift_w = jnp.concatenate([q_work[:, 1:], jnp.zeros((L, 1), dtype)], 1)
     shift_a = jnp.concatenate([q_arr[:, 1:], jnp.zeros((L, 1), jnp.int32)], 1)
+    shift_r = jnp.concatenate(
+        [q_ready[:, 1:], jnp.zeros((L, 1), jnp.int32)], 1
+    )
+    shift_n = jnp.concatenate(
+        [q_retry[:, 1:], jnp.zeros((L, 1), jnp.int32)], 1
+    )
     q_work = jnp.where(admit[:, None], shift_w, q_work)
     q_arr = jnp.where(admit[:, None], shift_a, q_arr)
+    q_ready = jnp.where(admit[:, None], shift_r, q_ready)
+    q_retry = jnp.where(admit[:, None], shift_n, q_retry)
     q_len = q_len - admit.astype(jnp.int32)
     admit_f = admit.astype(dtype)
 
@@ -192,15 +376,18 @@ def _step(
         # Size-aware mode is PREEMPTIVE: heSRPT's optimality proof assumes
         # the allocation is rebalanced whenever the active set changes
         # (arXiv:1903.09346 §3), so each slot the policy re-divides the FULL
-        # capacity across every active job — this slot's admissions plus all
-        # in-service jobs, whose residual works (state.remaining) are the
-        # sizes it ranks on. ``held`` is replaced wholesale; feasibility vs
-        # the full c is the policy's own water-fill invariant, so no
-        # residual-capacity netting is needed.
+        # surviving capacity across every active job — this slot's
+        # admissions plus all in-service jobs, whose residual works
+        # (state.remaining) are the sizes it ranks on. ``held`` is replaced
+        # wholesale; feasibility vs c_t is the policy's own water-fill
+        # invariant, so no residual-capacity netting is needed.
         sizes = jnp.where(admit, new_work, state.remaining)
         active_f = (sizes > 0).astype(dtype)
+        spec_t = (
+            spec if c_t is None else dataclasses.replace(spec, c=c_t)
+        )
         held = baselines.step_fn(algorithm)(
-            spec, active_f, step_w, sizes=sizes
+            spec_t, active_f, step_w, sizes=sizes
         )
         # admission reward on the admitted jobs' share, as in the held path
         reward_t = reward.total_reward(
@@ -208,13 +395,14 @@ def _step(
         )
     else:
         # Heuristics and OGA hold allocations for a job's whole tenure:
-        # allocate the admitted jobs against the *residual* capacity.
-        c_res = graph.residual_capacity(spec, state.held)
+        # allocate the admitted jobs against the *surviving residual*
+        # capacity (nominal capacity when no fault stream runs).
+        c_res = graph.residual_capacity(spec, state.held, c_t)
         if algorithm == "ogasched":
             y_prop = state.y
         else:
             y_prop = baselines.step_fn(algorithm)(
-                graph.residual_spec(spec, state.held), admit_f, step_w
+                graph.residual_spec(spec, state.held, c_t), admit_f, step_w
             )
         # exact one-sort projection (core.projection): the per-slot
         # allocation used to be a second 64-pass bisection inside the scan.
@@ -226,12 +414,16 @@ def _step(
     remaining = jnp.where(admit, new_work, state.remaining)
     svc_arr = jnp.where(admit, new_arr, state.svc_arr)
     svc_start = jnp.where(admit, t, state.svc_start)
+    svc_work = jnp.where(admit, new_work, state.svc_work)
+    svc_retry = jnp.where(admit, new_retry, state.svc_retry)
     used = jnp.sum(held * spec.mask[:, :, None], axis=0)  # (R, K) slot peak
 
     # -- service: drain work at the utility-derived rate of the held alloc --
     in_svc = remaining > 0
+    in_svc_f = in_svc.astype(dtype)
     rates = jnp.maximum(reward.service_rates(spec, held), rate_floor)
-    rem2 = remaining - rates * in_svc.astype(dtype)
+    rem2 = remaining - rates * in_svc_f
+    work_done = jnp.minimum(rates, remaining) * in_svc_f
     depart = in_svc & (rem2 <= 0)
     departf = depart.astype(dtype)
     jct = (t - svc_arr + 1).astype(dtype) * departf
@@ -242,7 +434,8 @@ def _step(
     # -- policy update: OGA ascends on the raw arrival indicator, exactly as
     # in slot mode — the learner sees the same stream either way; lifecycle
     # only changes which decisions get *executed* (admissions, netted by
-    # residual capacity). Queue/occupancy state never leaks into learning.
+    # residual capacity). Queue/occupancy/fault state never leaks into
+    # learning: the regret comparator is defined on the nominal polytope.
     if algorithm == "ogasched":
         y_next = ops.oga_update_spec(
             spec, state.y, x_t, state.eta, backend=backend, operands=operands,
@@ -252,19 +445,22 @@ def _step(
 
     new_state = LifecycleState(
         held=held, remaining=remaining, svc_arr=svc_arr, svc_start=svc_start,
-        q_work=q_work, q_arr=q_arr, q_len=q_len, dropped=dropped,
+        svc_work=svc_work, svc_retry=svc_retry,
+        q_work=q_work, q_arr=q_arr, q_ready=q_ready, q_retry=q_retry,
+        q_len=q_len, dropped=dropped, rdropped=state.rdropped,
         y=y_next, eta=state.eta * decay, t=t + 1,
     )
     events = (
         reward_t, admit, depart, jct, svc_slots, used,
         remaining > 0, q_len, dropped,
+        evict, wasted_t, state.rdropped, work_done,
     )
     return new_state, events
 
 
 @partial(
     jax.jit,
-    static_argnames=("algorithm", "queue_depth", "backend"),
+    static_argnames=("algorithm", "queue_depth", "backend", "fault_policy"),
 )
 def run(
     spec: ClusterSpec,
@@ -278,6 +474,8 @@ def run(
     rate_floor: float | jax.Array = 1e-3,
     backend: str = "auto",
     y0: Optional[jax.Array] = None,
+    faults: Optional[jax.Array] = None,
+    fault_policy: FaultPolicy = FaultPolicy(),
 ) -> LifecycleTrace:
     """Run one algorithm through the job lifecycle over a trace.
 
@@ -299,12 +497,22 @@ def run(
         rather than slot-mode's zeros: an allocation is *held* for the job's
         whole tenure here, and a zero allocation would pin the first job per
         port to the rate floor, blocking the port for the entire trace.
+      faults: optional (T, K) capacity-multiplier stream
+        (trace.build_faults); slot t executes against ``c * faults[t]``.
+        None (the default) compiles the pre-fault program unchanged.
+      fault_policy: eviction/retry/backoff knobs (static; only read when
+        ``faults`` is given).
     Returns: LifecycleTrace of per-slot events (leaves lead with T).
     """
     if works.shape != arrivals.shape:
         raise ValueError(
             "works must pair 1:1 with arrivals: got works "
             f"{works.shape} vs arrivals {arrivals.shape}"
+        )
+    if faults is not None and faults.shape != (arrivals.shape[0], spec.K):
+        raise ValueError(
+            "faults must be a (T, K) capacity-multiplier stream: got "
+            f"{faults.shape} vs T={arrivals.shape[0]}, K={spec.K}"
         )
     backend = ops.resolve_oga_backend(backend)
     use_oga = algorithm == "ogasched"
@@ -315,14 +523,16 @@ def run(
     state = init_state(spec, eta0, queue_depth, y0)
 
     def body(s, xw):
-        x_t, w_t = xw
+        x_t, w_t = xw[0], xw[1]
+        f_t = xw[2] if faults is not None else None
         return _step(
-            spec, s, x_t, w_t, algorithm=algorithm, decay=decay,
+            spec, s, x_t, w_t, f_t, algorithm=algorithm, decay=decay,
             rate_floor=rate_floor, backend=backend,
-            step_w=step_w, operands=operands,
+            step_w=step_w, operands=operands, fault_policy=fault_policy,
         )
 
-    _, events = jax.lax.scan(body, state, (arrivals, works))
+    xs = (arrivals, works) if faults is None else (arrivals, works, faults)
+    _, events = jax.lax.scan(body, state, xs)
     return LifecycleTrace(*events)
 
 
@@ -353,14 +563,27 @@ def _summarize_batch(tr: LifecycleTrace, c: jax.Array) -> dict[str, jax.Array]:
     util_k = jnp.mean(
         tr.used / jnp.maximum(c, 1e-9)[:, None], axis=(1, 2)
     )  # (G, K)
+    # robustness metrics: evictions re-admit jobs, so subtract the
+    # re-queue events (evictions minus hard drops) to count each accepted
+    # job exactly once; goodput nets the discarded progress out of the
+    # drained work (throughput counts completions, goodput counts work).
+    evictions = jnp.sum(tr.evicted.astype(dtype), axis=(1, 2))
+    fault_drops = tr.rdropped[:, -1].astype(dtype)
+    wasted = jnp.sum(tr.wasted, axis=-1)
+    done = jnp.sum(tr.work_done, axis=(1, 2))
     out = {
         "completed": n.astype(dtype),
         "arrived": (
             jnp.sum(tr.admitted.astype(dtype), axis=(1, 2))
             + jnp.sum(tr.q_depth[:, -1].astype(dtype), axis=-1)
+            - (evictions - fault_drops)
         ),
         "dropped": tr.dropped[:, -1].astype(dtype),
         "throughput": n.astype(dtype) / T,
+        "goodput": (done - wasted) / T,
+        "wasted_work": wasted,
+        "evictions": evictions,
+        "fault_drops": fault_drops,
         "jct_mean": jnp.where(some, jct_mean, nan),
         "jct_p99": jnp.where(some, p99, nan),
         "slowdown_mean": jnp.where(some, slow_mean, nan),
@@ -388,8 +611,11 @@ def summarize(tr: LifecycleTrace, spec: ClusterSpec) -> dict[str, float]:
     jct_mean / jct_p99: completion time in slots over finished jobs.
     slowdown_mean: mean JCT / service-time ratio (1.0 = never queued).
     utilization: mean_t mean_{r,k} used / c; utilization/<k>: per resource.
-    completed / arrived / dropped: job counts (arrived = admitted+queued,
-    i.e. drops excluded); throughput: completed per slot.
+    completed / arrived / dropped: job counts (arrived = admitted+queued
+    minus eviction re-admissions, i.e. each accepted job once, drops
+    excluded); throughput: completed per slot.
+    goodput: (drained work - wasted work) / T; wasted_work: progress
+    discarded by evictions; evictions / fault_drops: event counts.
     """
     departed = np.asarray(tr.departed, bool)
     jct = np.asarray(tr.jct)[departed]
@@ -397,12 +623,22 @@ def summarize(tr: LifecycleTrace, spec: ClusterSpec) -> dict[str, float]:
     used = np.asarray(tr.used)  # (T, R, K)
     c = np.maximum(np.asarray(spec.c), 1e-9)
     util_k = (used / c[None]).mean(axis=(0, 1))  # (K,)
+    evictions = float(np.asarray(tr.evicted).sum())
+    fault_drops = float(np.asarray(tr.rdropped)[-1])
+    wasted = float(np.asarray(tr.wasted).sum())
+    done = float(np.asarray(tr.work_done).sum())
+    T = departed.shape[0]
     out = {
         "completed": float(departed.sum()),
         "arrived": float(np.asarray(tr.admitted).sum()
-                         + np.asarray(tr.q_depth)[-1].sum()),
+                         + np.asarray(tr.q_depth)[-1].sum())
+                   - (evictions - fault_drops),
         "dropped": float(np.asarray(tr.dropped)[-1]),
-        "throughput": float(departed.sum()) / departed.shape[0],
+        "throughput": float(departed.sum()) / T,
+        "goodput": (done - wasted) / T,
+        "wasted_work": wasted,
+        "evictions": evictions,
+        "fault_drops": fault_drops,
         "jct_mean": float(jct.mean()) if jct.size else float("nan"),
         "jct_p99": float(np.percentile(jct, 99)) if jct.size else float("nan"),
         "slowdown_mean": (
@@ -414,3 +650,38 @@ def summarize(tr: LifecycleTrace, spec: ClusterSpec) -> dict[str, float]:
     for k, u in enumerate(util_k):
         out[f"utilization/{k}"] = float(u)
     return out
+
+
+def recovery_time(
+    rewards,
+    faults,
+    frac: float = 0.95,
+    window: int = 25,
+) -> float:
+    """Slots from the first fault until reward recovers to ``frac`` of the
+    pre-fault level (host-side diagnostic; benchmarks/bench_faults.py).
+
+    The pre-fault level is the mean per-slot reward over the slots strictly
+    before the first faulted slot (any resource's multiplier < 1); recovery
+    is the first slot >= the fault where the trailing ``window``-slot moving
+    average of the reward reaches ``frac`` x that level. Returns 0.0 when
+    the stream never faults, +inf when the run never recovers, NaN when the
+    fault lands before any pre-fault baseline exists.
+    """
+    r = np.asarray(rewards, np.float64)
+    f = np.asarray(faults)
+    faulted = np.nonzero((f < 1.0).any(axis=-1))[0]
+    if faulted.size == 0:
+        return 0.0
+    t0 = int(faulted[0])
+    if t0 == 0:
+        return float("nan")
+    base = r[:t0].mean()
+    if base <= 0.0:
+        return float("nan")
+    # trailing moving average, window clipped at the start of the trace
+    cum = np.concatenate([[0.0], np.cumsum(r)])
+    lo = np.maximum(np.arange(len(r)) - window + 1, 0)
+    avg = (cum[np.arange(len(r)) + 1] - cum[lo]) / (np.arange(len(r)) - lo + 1)
+    ok = np.nonzero(avg[t0:] >= frac * base)[0]
+    return float(ok[0]) if ok.size else float("inf")

@@ -38,6 +38,7 @@ def run_all(
     mode: str = "slot",
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
+    fault_policy: lifecycle.FaultPolicy = lifecycle.FaultPolicy(),
 ) -> dict[str, SimResult]:
     """Single-configuration comparison; each algorithm goes through the same
     paths the vectorised grid uses (``sweep.run_algorithm`` /
@@ -46,17 +47,24 @@ def run_all(
 
     mode="lifecycle" runs the occupancy-aware job lifecycle (jobs hold
     their allocation until their work drains; sched.lifecycle) and fills
-    ``SimResult.lifecycle`` with JCT/slowdown/utilization metrics. Regret
-    is a slot-mode notion (the comparator plays every slot from full
-    capacity), so ``with_regret`` only applies in slot mode.
+    ``SimResult.lifecycle`` with JCT/slowdown/utilization metrics. An
+    active ``cfg.faults`` process additionally injects the capacity-fault
+    stream (trace.build_faults) with ``fault_policy`` eviction/retry
+    semantics — lifecycle mode only (slot mode raises, matching the sweep
+    engine). Regret is a slot-mode notion (the comparator plays every slot
+    from full capacity), so ``with_regret`` only applies in slot mode.
     """
     if mode not in ("slot", "lifecycle"):
         raise ValueError(f"mode must be 'slot' or 'lifecycle', got {mode!r}")
+    # reuse the sweep engine's gate: active fault configs in slot mode are
+    # a config error, not something to silently ignore
+    has_faults = sweep.needs_faults([sweep.SweepPoint(cfg=cfg)], mode)
     spec, arrivals = trace.make(cfg)
     works = (
         trace.build_works(cfg)
         if sweep.needs_works(algorithms, mode) else None
     )
+    faults = trace.build_faults(cfg) if has_faults else None
     out: dict[str, SimResult] = {}
     y_star = None
     # The oracle only feeds OGASCHED's regret certificate — skip the
@@ -71,6 +79,7 @@ def run_all(
                 spec, arrivals, works, name,
                 eta0=eta0, decay=decay, backend=backend,
                 queue_depth=queue_depth, rate_floor=rate_floor,
+                faults=faults, fault_policy=fault_policy,
             )
             tr = jax.block_until_ready(tr)
             rewards = np.asarray(tr.rewards)

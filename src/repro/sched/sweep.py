@@ -109,7 +109,10 @@ class SweepBatch:
     (G,) axis; ``points`` keeps the host-side provenance of each row (same
     order). ``works`` is genuinely optional: slot-mode grids never sample
     job sizes, and ``run_grid(mode="lifecycle")`` rejects a batch without
-    them instead of silently running on garbage.
+    them instead of silently running on garbage. ``faults`` is the stacked
+    (G, T, K) capacity-multiplier stream, present exactly when some point's
+    ``cfg.faults`` is active (lifecycle mode only — fault-free grids carry
+    None and compile the pre-fault program unchanged).
     """
 
     spec: ClusterSpec                   # every leaf (G, ...)
@@ -117,6 +120,7 @@ class SweepBatch:
     eta0: jax.Array                     # (G,)
     decay: jax.Array                    # (G,)
     works: Optional[jax.Array] = None   # (G, T, L) job sizes (lifecycle only)
+    faults: Optional[jax.Array] = None  # (G, T, K) capacity multipliers
     points: tuple[SweepPoint, ...] = ()
 
     @property
@@ -187,6 +191,22 @@ def needs_works(algorithms: Sequence[str], mode: str) -> bool:
     )
 
 
+def needs_faults(points: Sequence[SweepPoint], mode: str) -> bool:
+    """Whether a grid must carry a fault stream: some point's fault process
+    is active. Fault injection is a lifecycle-mode concept (slot mode has
+    nothing to evict — allocations are recomputed from full capacity every
+    slot), so active fault configs in slot mode fail loudly instead of
+    being silently ignored."""
+    active = any(p.cfg.faults.active for p in points)
+    if active and mode != "lifecycle":
+        raise ValueError(
+            "fault injection (cfg.faults) requires mode='lifecycle': slot "
+            "mode holds nothing across slots, so capacity faults would be "
+            "silently ignored"
+        )
+    return active
+
+
 def build_batch(
     points: Sequence[SweepPoint],
     mode: str = "slot",
@@ -198,18 +218,21 @@ def build_batch(
 
     mode="lifecycle" additionally samples per-job work sizes; slot-mode
     batches carry ``works=None`` unless ``with_works=True`` (size-aware
-    slot grids — see ``needs_works``). ``trace_backend`` selects host numpy
-    (bitwise-pinned golden path, the default) or one jitted vmapped device
-    generation (``trace.make_batch(trace_backend="device")``).
+    slot grids — see ``needs_works``), and fault streams exactly when a
+    point's ``cfg.faults`` is active (``needs_faults``). ``trace_backend``
+    selects host numpy (bitwise-pinned golden path, the default) or one
+    jitted vmapped device generation
+    (``trace.make_batch(trace_backend="device")``).
     """
     _check_mode(mode)
     if not points:
         raise ValueError("empty sweep grid")
     if with_works is None:
         with_works = mode == "lifecycle"
-    spec, arrivals, works = trace.make_batch(
+    spec, arrivals, works, faults = trace.make_batch(
         [p.cfg for p in points], with_works=with_works,
         trace_backend=resolve_trace_backend(trace_backend, len(points)),
+        with_faults=needs_faults(points, mode),
     )
     return SweepBatch(
         spec=spec,
@@ -217,6 +240,7 @@ def build_batch(
         eta0=jnp.asarray([p.eta0 for p in points], jnp.float32),
         decay=jnp.asarray([p.decay for p in points], jnp.float32),
         works=works,
+        faults=faults,
         points=tuple(points),
     )
 
@@ -269,13 +293,24 @@ def _vmap_slot(spec, arrivals, eta0, decay, *, name, backend, works=None):
 def _vmap_lifecycle(
     spec, arrivals, works, eta0, decay, rate_floor,
     *, name, backend, queue_depth,
+    faults=None, fault_policy=lifecycle.FaultPolicy(),
 ):
+    if faults is None:
+        # fault-free grids trace the pre-fault lifecycle program unchanged
+        return jax.vmap(
+            lambda s, a, w, e, d: lifecycle.run(
+                s, a, w, name, eta0=e, decay=d,
+                backend=backend, queue_depth=queue_depth,
+                rate_floor=rate_floor,
+            )
+        )(spec, arrivals, works, eta0, decay)
     return jax.vmap(
-        lambda s, a, w, e, d: lifecycle.run(
+        lambda s, a, w, e, d, f: lifecycle.run(
             s, a, w, name, eta0=e, decay=d,
             backend=backend, queue_depth=queue_depth, rate_floor=rate_floor,
+            faults=f, fault_policy=fault_policy,
         )
-    )(spec, arrivals, works, eta0, decay)
+    )(spec, arrivals, works, eta0, decay, faults)
 
 
 def _grid_ogasched(spec, arrivals, eta0, decay, backend):
@@ -283,19 +318,20 @@ def _grid_ogasched(spec, arrivals, eta0, decay, backend):
 
 
 def _grid_lifecycle(
-    spec, arrivals, works, eta0, decay, rate_floor,
-    name, backend, queue_depth,
+    spec, arrivals, works, eta0, decay, rate_floor, faults,
+    name, backend, queue_depth, fault_policy,
 ):
     return _vmap_lifecycle(
         spec, arrivals, works, eta0, decay, rate_floor,
         name=name, backend=backend, queue_depth=queue_depth,
+        faults=faults, fault_policy=fault_policy,
     )
 
 
 _run_grid_ogasched = partial(jax.jit, static_argnames=("backend",))(
     _grid_ogasched
 )
-_LIFECYCLE_STATICS = ("name", "backend", "queue_depth")
+_LIFECYCLE_STATICS = ("name", "backend", "queue_depth", "fault_policy")
 _run_grid_lifecycle = partial(jax.jit, static_argnames=_LIFECYCLE_STATICS)(
     _grid_lifecycle
 )
@@ -303,7 +339,10 @@ _run_grid_lifecycle = partial(jax.jit, static_argnames=_LIFECYCLE_STATICS)(
 # buffers are handed to XLA for reuse as output storage, capping a streamed
 # grid's peak memory at (outputs + inputs - donated) per chunk. Only the
 # LAST algorithm of a chunk may donate (earlier dispatches share the
-# buffers), and donation is skipped on CPU where XLA cannot use it.
+# buffers), and donation is skipped on CPU where XLA cannot use it. The
+# fault stream is deliberately NOT donated: it is tiny (T*K vs T*L rows)
+# and None for fault-free grids, where a donate_argnums entry pointing at
+# an empty pytree would be a silent no-op trap.
 _run_grid_ogasched_donated = partial(
     jax.jit, static_argnames=("backend",), donate_argnums=(1,)
 )(_grid_ogasched)
@@ -335,6 +374,7 @@ def run_grid(
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
     donate: bool = False,
+    fault_policy: lifecycle.FaultPolicy = lifecycle.FaultPolicy(),
 ) -> dict[str, jax.Array] | dict[str, lifecycle.LifecycleTrace]:
     """Run every algorithm over every configuration.
 
@@ -358,6 +398,11 @@ def run_grid(
     always follows ``algorithms`` order. The donated leaves are dead
     afterwards; callers must not reuse the batch. No-op on CPU or when no
     dispatch can donate.
+
+    ``batch.faults`` (built by ``build_batch`` when a point's fault process
+    is active) runs every lifecycle row against its surviving capacity;
+    ``fault_policy`` sets the eviction/retry/backoff knobs (static — one
+    compile per policy).
     """
     _check_mode(mode)
     if batch.works is None and needs_works(algorithms, mode):
@@ -384,7 +429,9 @@ def run_grid(
             out[name] = fn(
                 batch.spec, batch.arrivals, batch.works, batch.eta0,
                 batch.decay, jnp.asarray(rate_floor, jnp.float32),
+                batch.faults,
                 name, _algorithm_backend(name, backend), queue_depth,
+                fault_policy,
             )
         elif name == "ogasched":
             fn = _run_grid_ogasched_donated if last else _run_grid_ogasched
@@ -408,9 +455,19 @@ def run_grid(
 @lru_cache(maxsize=None)
 def _sharded_grid_fn(
     mesh: Mesh, name: str, mode: str, backend: str, queue_depth: int,
+    fault_policy: lifecycle.FaultPolicy = lifecycle.FaultPolicy(),
+    has_faults: bool = False,
 ):
     gspec = P(mesh.axis_names[0])
-    if mode == "lifecycle":
+    if mode == "lifecycle" and has_faults:
+        def body(spec, arrivals, works, eta0, decay, rate_floor, faults):
+            return _vmap_lifecycle(
+                spec, arrivals, works, eta0, decay, rate_floor,
+                name=name, backend=backend, queue_depth=queue_depth,
+                faults=faults, fault_policy=fault_policy,
+            )
+        in_specs = (gspec, gspec, gspec, gspec, gspec, P(), gspec)
+    elif mode == "lifecycle":
         def body(spec, arrivals, works, eta0, decay, rate_floor):
             return _vmap_lifecycle(
                 spec, arrivals, works, eta0, decay, rate_floor,
@@ -453,6 +510,7 @@ def run_grid_sharded(
     mode: str = "slot",
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
+    fault_policy: lifecycle.FaultPolicy = lifecycle.FaultPolicy(),
 ) -> dict[str, jax.Array] | dict[str, lifecycle.LifecycleTrace]:
     """``run_grid`` with the grid axis sharded over a device mesh.
 
@@ -469,6 +527,7 @@ def run_grid_sharded(
         return run_grid(
             batch, algorithms, backend=backend, mode=mode,
             queue_depth=queue_depth, rate_floor=rate_floor,
+            fault_policy=fault_policy,
         )
     if batch.works is None and needs_works(algorithms, mode):
         raise ValueError(
@@ -486,8 +545,15 @@ def run_grid_sharded(
     for name in algorithms:
         fn = _sharded_grid_fn(
             mesh, name, mode, _algorithm_backend(name, backend), queue_depth,
+            fault_policy, batch.faults is not None,
         )
-        if mode == "lifecycle":
+        if mode == "lifecycle" and batch.faults is not None:
+            res = fn(
+                spec, arrivals, _pad_rows(batch.works, pad), eta0, decay,
+                jnp.asarray(rate_floor, jnp.float32),
+                _pad_rows(batch.faults, pad),
+            )
+        elif mode == "lifecycle":
             res = fn(
                 spec, arrivals, _pad_rows(batch.works, pad), eta0, decay,
                 jnp.asarray(rate_floor, jnp.float32),
@@ -524,17 +590,21 @@ def sweep_fingerprint(
     backend: str = "auto",
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
+    fault_policy: lifecycle.FaultPolicy = lifecycle.FaultPolicy(),
 ) -> str:
     """SHA-256 over everything that determines a streamed sweep's summaries.
 
     Covers every point's full TraceConfig + hyperparameters (order matters:
-    chunk index -> grid rows), the algorithm list, chunking, mode, the
-    RESOLVED trace backend (so ``"auto"`` and the concrete backend it
-    resolves to fingerprint identically), and the run parameters that reach
-    the kernels. Execution layout — ``sharded``, ``prefetch``, ``donate``
-    — is deliberately excluded: those are bitwise-pure reorganisations
-    (pinned by tests/test_sweep_sharded.py, test_sweep_stream.py), so a
-    sweep checkpointed on one host may resume on a different device count.
+    chunk index -> grid rows; ``cfg.faults`` recurses into the row dict, so
+    the fault process is fingerprinted per point), the algorithm list,
+    chunking, mode, the RESOLVED trace backend (so ``"auto"`` and the
+    concrete backend it resolves to fingerprint identically), and the run
+    parameters that reach the kernels — including the eviction/retry
+    ``fault_policy``. Execution layout — ``sharded``, ``prefetch``,
+    ``donate`` — is deliberately excluded: those are bitwise-pure
+    reorganisations (pinned by tests/test_sweep_sharded.py,
+    test_sweep_stream.py), so a sweep checkpointed on one host may resume
+    on a different device count.
     """
     h = hashlib.sha256()
     header = {
@@ -545,6 +615,7 @@ def sweep_fingerprint(
         "backend": backend,
         "queue_depth": int(queue_depth),
         "rate_floor": float(rate_floor),
+        "fault_policy": dataclasses.asdict(fault_policy),
         "n_points": len(points),
     }
     h.update(json.dumps(header, sort_keys=True).encode())
@@ -589,6 +660,7 @@ class SweepCheckpoint:
         backend: str = "auto",
         queue_depth: int = 8,
         rate_floor: float = 1e-3,
+        fault_policy: lifecycle.FaultPolicy = lifecycle.FaultPolicy(),
     ):
         self.dir = directory
         self.chunk_size = int(chunk_size)
@@ -597,6 +669,7 @@ class SweepCheckpoint:
             points, algorithms, chunk_size=chunk_size, mode=mode,
             trace_backend=trace_backend, backend=backend,
             queue_depth=queue_depth, rate_floor=rate_floor,
+            fault_policy=fault_policy,
         )
         self.manager = CheckpointManager(directory, keep=None, every=1)
         man_path = os.path.join(directory, self.MANIFEST)
@@ -683,6 +756,8 @@ def _chunk_batches(
                 decay=_pad_rows(batch.decay, pad),
                 works=None if batch.works is None
                 else _pad_rows(batch.works, pad),
+                faults=None if batch.faults is None
+                else _pad_rows(batch.faults, pad),
                 points=batch.points,
             )
         yield slice(start, start + len(chunk)), batch
@@ -809,6 +884,7 @@ def run_grid_stream(
     donate: bool = False,
     stats: Optional[dict] = None,
     checkpoint: Optional[SweepCheckpoint] = None,
+    fault_policy: lifecycle.FaultPolicy = lifecycle.FaultPolicy(),
 ) -> Iterator[tuple[slice, SweepBatch, dict]]:
     """Stream a grid chunk by chunk: yields ``(grid_slice, batch, outputs)``.
 
@@ -853,12 +929,14 @@ def run_grid_stream(
     it accumulates (``sweep_stream`` does exactly this with its summary
     dicts). Composes with ``sharded``, ``donate``, and ``prefetch``.
     """
+    needs_faults(points, mode)  # slot-mode fault configs fail before chunk 0
     start_chunk = 0
     if checkpoint is not None:
         fp = sweep_fingerprint(
             points, algorithms, chunk_size=chunk_size, mode=mode,
             trace_backend=trace_backend, backend=backend,
             queue_depth=queue_depth, rate_floor=rate_floor,
+            fault_policy=fault_policy,
         )
         if fp != checkpoint.fingerprint:
             raise SweepResumeMismatch(
@@ -872,6 +950,7 @@ def run_grid_stream(
     )
     runner = run_grid_sharded if sharded else run_grid
     kw = {"donate": True} if donate else {}
+    kw["fault_policy"] = fault_policy
     it = iter_batches(
         points, chunk_size, mode=mode,
         trace_backend=trace_backend, prefetch=prefetch,
@@ -904,6 +983,7 @@ def run_grid_stream(
                 decay=batch.decay[:g],
                 works=None if donate or batch.works is None
                 else batch.works[:g],
+                faults=None if batch.faults is None else batch.faults[:g],
                 points=batch.points,
             )
         yield sl, batch, out
@@ -922,6 +1002,7 @@ def sweep_stream(
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
     checkpoint_dir: Optional[str] = None,
+    fault_policy: lifecycle.FaultPolicy = lifecycle.FaultPolicy(),
 ) -> dict[str, np.ndarray]:
     """Full-grid per-config summaries via the streaming driver.
 
@@ -954,6 +1035,7 @@ def sweep_stream(
             checkpoint_dir, points, algorithms, chunk_size=chunk_size,
             mode=mode, trace_backend=trace_backend, backend=backend,
             queue_depth=queue_depth, rate_floor=rate_floor,
+            fault_policy=fault_policy,
         )
         for summ in ckpt.load_summaries():
             for k, v in summ.items():
@@ -963,7 +1045,7 @@ def sweep_stream(
         sharded=sharded, backend=backend, trace_backend=trace_backend,
         prefetch=prefetch,
         queue_depth=queue_depth, rate_floor=rate_floor, donate=True,
-        checkpoint=ckpt,
+        checkpoint=ckpt, fault_policy=fault_policy,
     ):
         summ = (
             summarize_lifecycle(out, batch) if mode == "lifecycle"
@@ -997,7 +1079,10 @@ def grid_memory_bytes(
     PLUS one more the worker is building while the queue is full —
     ``prefetch + 1`` staged chunks total — plus O(G) summary rows.
     Lifecycle outputs dominate either way: a LifecycleTrace row costs
-    T·(2 + 6L + R·K) floats vs slot mode's T.
+    T·(4 + 8L + R·K) floats vs slot mode's T (the fault-robustness leaves
+    — evicted, wasted, rdropped, work_done — are carried whether or not a
+    fault stream runs; the (T, K) fault input only when ``cfg.faults`` is
+    active).
     """
     _check_mode(mode)
     L, R, K, T = cfg.L, cfg.R, cfg.K, cfg.T
@@ -1006,7 +1091,9 @@ def grid_memory_bytes(
     per_alg = T  # slot-mode rewards
     if mode == "lifecycle":
         inputs += T * L  # works
-        per_alg = T * (2 + 6 * L + R * K)  # LifecycleTrace leaves
+        if cfg.faults.active:
+            inputs += T * K  # fault capacity multipliers
+        per_alg = T * (4 + 8 * L + R * K)  # LifecycleTrace leaves
     in_b = G * inputs * itemsize
     out_b = G * per_alg * len(algorithms) * itemsize
     pre_b = (prefetch + 1) * in_b if prefetch else 0

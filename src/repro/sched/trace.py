@@ -50,6 +50,53 @@ JOB_TEMPLATES = np.array(
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Seeded fault-event process for a trace (ROADMAP item 1: server
+    failures, scheduled drains, contention shocks).
+
+    Three independent per-resource event families compose multiplicatively
+    into a (T, K) capacity-multiplier tensor (``build_faults``):
+
+    * **failures** — each slot each resource starts a failure event with
+      probability ``fail_rate``; an event removes ``fail_frac`` of the
+      resource's capacity and repairs after a geometric number of slots
+      with mean ``repair_mean`` (the discrete exponential-repair model).
+      Overlapping events compound: d concurrent failures leave
+      ``(1 - fail_frac)**d`` of capacity.
+    * **drains** — scheduled maintenance: every ``drain_period`` slots
+      (seeded per-resource phase) the resource loses ``drain_frac`` of its
+      capacity for ``drain_len`` consecutive slots. ``drain_period=0``
+      disables.
+    * **shocks** — transient contention: a shock starts with probability
+      ``shock_rate`` per slot and multiplies capacity by ``shock_depth``
+      for ``shock_len`` slots (cumsum windows, like arrival bursts).
+
+    All-zero rates (the default) mean a fault-free trace: ``build_faults``
+    returns exactly 1.0 everywhere and ``active`` is False, so fault-free
+    configs never pay for the stream.
+    """
+
+    fail_rate: float = 0.0      # P[failure event starts] per slot, resource
+    fail_frac: float = 0.25     # capacity fraction lost per failure event
+    repair_mean: float = 50.0   # mean repair duration in slots (geometric)
+    drain_period: int = 0       # slots between scheduled drains (0 = off)
+    drain_len: int = 40         # slots a drain lasts
+    drain_frac: float = 0.5     # capacity fraction removed while draining
+    shock_rate: float = 0.0     # P[contention shock starts] per slot
+    shock_len: int = 10         # slots a shock lasts
+    shock_depth: float = 0.6    # capacity multiplier during a shock
+
+    @property
+    def active(self) -> bool:
+        """Whether any event family can fire (capacity ever below 1.0)."""
+        return (
+            self.fail_rate > 0.0
+            or self.drain_period > 0
+            or self.shock_rate > 0.0
+        )
+
+
+@dataclasses.dataclass(frozen=True)
 class TraceConfig:
     L: int = 10
     R: int = 128
@@ -68,6 +115,9 @@ class TraceConfig:
     # at the utility-derived service rate (reward.service_rates):
     work_mean: float = 60.0     # mean sampled job size
     work_tail: float = 2.1      # Pareto tail index (heavy-tailed sizes)
+    # fault-event process (failures / drains / shocks -> (T, K) capacity
+    # multipliers, lifecycle mode only); default = fault-free
+    faults: FaultConfig = FaultConfig()
 
 
 BURST_LEN = 20  # slots a burst keeps a port firing
@@ -78,12 +128,18 @@ BURST_LEN = 20  # slots a burst keeps a port firing
 # stream — so a seed axis of a grid silently reuses randomness. SeedSequence
 # spawning derives statistically independent children from a single root
 # seed, and children of different roots are independent of each other.
-STREAMS = ("spec", "arrivals", "works")
+# APPEND-ONLY: SeedSequence child i does not depend on how many children are
+# spawned, so adding a stream at the END leaves every existing stream's bits
+# (and therefore the bitwise trace goldens) untouched; inserting or
+# reordering would re-key them all. "faults" is the fault-event process
+# (build_faults); "cluster" is the job-manager cluster synthesis
+# (sched.job_manager.build_cluster).
+STREAMS = ("spec", "arrivals", "works", "faults", "cluster")
 
 
 def stream_rng(seed: int, stream: str) -> np.random.Generator:
-    """The seeded generator for one trace component ("spec" | "arrivals" |
-    "works"). Tests that reconstruct a stream must derive it here."""
+    """The seeded generator for one trace component (one of ``STREAMS``).
+    Tests that reconstruct a stream must derive it here."""
     children = np.random.SeedSequence(seed).spawn(len(STREAMS))
     return np.random.default_rng(children[STREAMS.index(stream)])
 
@@ -192,6 +248,57 @@ def build_works(cfg: TraceConfig) -> jax.Array:
     return jax.device_put(np.asarray(w, np.float32))
 
 
+def build_faults(cfg: TraceConfig) -> jax.Array:
+    """(T, K) capacity-multiplier tensor of the seeded fault-event process.
+
+    ``mult[t, k]`` in [0, 1] scales every instance's capacity of resource
+    ``k`` at slot ``t`` (the lifecycle layer computes ``c_t = c * mult[t]``).
+    Event model — see :class:`FaultConfig`:
+
+    * failures: Bernoulli(fail_rate) starts per (t, k); each start opens a
+      geometric(1/repair_mean) repair window; d overlapping failures leave
+      ``(1 - fail_frac)**d``. Overlap counting is a difference-array
+      scatter + cumsum (the vectorised form of per-event loops, like the
+      burst windows in ``build_arrivals``).
+    * drains: modular windows — resource k drains for ``drain_len`` slots
+      out of every ``drain_period``, at a seeded per-resource phase.
+    * shocks: Bernoulli(shock_rate) starts, fixed ``shock_len`` windows
+      (cumsum difference, exactly the burst-window formulation).
+
+    Draw order (part of the bitwise-pinned contract, tests/test_trace.py):
+    failure starts, failure durations, drain phases, shock starts — each
+    family drawn only when its rate is nonzero. A fault-free config skips
+    the RNG entirely and returns ones.
+    """
+    fc = cfg.faults
+    T, K = cfg.T, cfg.K
+    if not fc.active:
+        return jax.device_put(np.ones((T, K), np.float32))
+    rng = stream_rng(cfg.seed, "faults")
+    mult = np.ones((T, K))
+    if fc.fail_rate > 0.0:
+        starts = rng.uniform(size=(T, K)) < fc.fail_rate
+        dur = rng.geometric(1.0 / max(fc.repair_mean, 1.0), size=(T, K))
+        t_idx, k_idx = np.nonzero(starts)
+        ends = np.minimum(t_idx + dur[t_idx, k_idx], T)
+        depth = np.zeros((T + 1, K))
+        np.add.at(depth, (t_idx, k_idx), 1.0)
+        np.add.at(depth, (ends, k_idx), -1.0)
+        active = np.cumsum(depth[:T], axis=0)  # concurrent failures per (t,k)
+        mult = mult * (1.0 - fc.fail_frac) ** active
+    if fc.drain_period > 0:
+        phase = rng.integers(0, fc.drain_period, size=K)
+        t = np.arange(T)[:, None]
+        draining = (t + phase[None, :]) % fc.drain_period < fc.drain_len
+        mult = np.where(draining, mult * (1.0 - fc.drain_frac), mult)
+    if fc.shock_rate > 0.0:
+        s_starts = rng.uniform(size=(T, K)) < fc.shock_rate
+        cum = np.cumsum(s_starts, axis=0)
+        in_shock = (cum - np.pad(cum, ((fc.shock_len, 0), (0, 0)))[:T]) > 0
+        mult = np.where(in_shock, mult * fc.shock_depth, mult)
+    return jax.device_put(np.asarray(np.clip(mult, 0.0, 1.0), np.float32))
+
+
 def make(cfg: TraceConfig):
     """Convenience: (spec, arrivals)."""
     return build_spec(cfg), build_arrivals(cfg)
@@ -216,33 +323,45 @@ def check_batch_cfgs(cfgs) -> list:
     return cfgs
 
 
-def make_batch(cfgs, with_works: bool = False, trace_backend: str = "host"):
-    """Stacked traces for a batch of configs: (spec, arrivals[, works]) with
-    every leaf carrying a leading (G,) axis.
+def make_batch(
+    cfgs,
+    with_works: bool = False,
+    trace_backend: str = "host",
+    with_faults: bool = False,
+):
+    """Stacked traces for a batch of configs: (spec, arrivals, works,
+    faults) with every leaf carrying a leading (G,) axis. ``works`` and
+    ``faults`` are None unless requested.
 
     All configs must share (L, R, K, T) so the stacked leaves are
     rectangular. ``works`` is generated only when requested (lifecycle-mode
-    grids); slot-mode sweeps never pay for job-size sampling. This is the
-    per-chunk generation step of the streaming sweep driver
-    (``sweep.run_grid_stream``), so it must stay O(len(cfgs)) in memory.
+    grids); slot-mode sweeps never pay for job-size sampling. ``faults``
+    (``with_faults=True``) stacks each config's (T, K) capacity-multiplier
+    tensor (``build_faults``) — fault-free configs in the batch contribute
+    all-ones rows. This is the per-chunk generation step of the streaming
+    sweep driver (``sweep.run_grid_stream``), so it must stay
+    O(len(cfgs)) in memory.
 
     ``trace_backend`` selects where the randomness is drawn:
 
     * ``"host"`` (default) — the bitwise-pinned numpy golden path: one
-      serial ``build_spec``/``build_arrivals``/``build_works`` per config,
-      stacked. Matches ``make``/``make_lifecycle`` exactly.
+      serial ``build_spec``/``build_arrivals``/``build_works``/
+      ``build_faults`` per config, stacked. Matches ``make``/
+      ``make_lifecycle`` exactly.
     * ``"device"`` — one jitted, vmapped-over-the-grid generation
       (``sched.trace_device``) from counter-based ``jax.random`` keys:
       statistically equivalent traces (same templates, jitter ranges,
-      diurnal/burst arrival process, Lomax job sizes; pinned by
-      tests/test_trace_device.py) but a different bitstream, at a fraction
-      of the host cost for streamed chunks.
+      diurnal/burst arrival process, Lomax job sizes, fault-event process;
+      pinned by tests/test_trace_device.py) but a different bitstream, at
+      a fraction of the host cost for streamed chunks.
     """
     cfgs = check_batch_cfgs(cfgs)
     if trace_backend == "device":
         from repro.sched import trace_device
 
-        return trace_device.make_batch(cfgs, with_works=with_works)
+        return trace_device.make_batch(
+            cfgs, with_works=with_works, with_faults=with_faults
+        )
     if trace_backend != "host":
         raise ValueError(
             f"trace_backend must be one of {TRACE_BACKENDS}, "
@@ -252,4 +371,7 @@ def make_batch(cfgs, with_works: bool = False, trace_backend: str = "host"):
     spec = jax.tree.map(lambda *ls: jnp.stack(ls), *specs)
     arrivals = jnp.stack([build_arrivals(c) for c in cfgs])
     works = jnp.stack([build_works(c) for c in cfgs]) if with_works else None
-    return spec, arrivals, works
+    faults = (
+        jnp.stack([build_faults(c) for c in cfgs]) if with_faults else None
+    )
+    return spec, arrivals, works, faults

@@ -74,9 +74,17 @@ class DeviceStatics:
     work_mean: float
     work_tail: float
     with_works: bool
+    # fault-event process statics (trace.FaultConfig, hashable) + gating;
+    # None when faults are not generated so fault-free sweeps reuse the
+    # pre-fault compiled generators
+    faults: trace.FaultConfig = None
+    with_faults: bool = False
 
     @classmethod
-    def from_cfg(cls, cfg: trace.TraceConfig, with_works: bool):
+    def from_cfg(
+        cls, cfg: trace.TraceConfig, with_works: bool,
+        with_faults: bool = False,
+    ):
         return cls(
             L=cfg.L, R=cfg.R, K=cfg.K, T=cfg.T, density=cfg.density,
             alpha_range=tuple(cfg.alpha_range),
@@ -84,6 +92,8 @@ class DeviceStatics:
             diurnal=cfg.diurnal, burst_prob=cfg.burst_prob,
             work_mean=cfg.work_mean, work_tail=cfg.work_tail,
             with_works=with_works,
+            faults=cfg.faults if with_faults else None,
+            with_faults=with_faults,
         )
 
 
@@ -167,6 +177,54 @@ def _build_works(key, st: DeviceStatics) -> jax.Array:
     return (scale * (1.0 + pareto)).astype(jnp.float32)
 
 
+def _build_faults(key, st: DeviceStatics) -> jax.Array:
+    """Device twin of trace.build_faults: (T, K) capacity multipliers.
+
+    Same event model, family by family — Bernoulli failure starts with
+    geometric repair windows (inverse-CDF: ceil(log(u)/log(1-p)), the
+    discrete exponential), overlap-counted by a difference-array scatter +
+    cumsum; modular drain windows with a seeded per-resource phase; and
+    shock windows via the cumsum-difference formulation shared with the
+    arrival bursts. Each family draws from its own split of the "faults"
+    stream key, so disabling one family never shifts another's bits.
+    """
+    fc = st.faults
+    T, K = st.T, st.K
+    if fc is None or not fc.active:
+        return jnp.ones((T, K), jnp.float32)
+    k_start, k_dur, k_drain, k_shock = jax.random.split(key, 4)
+    mult = jnp.ones((T, K), jnp.float32)
+    if fc.fail_rate > 0.0:
+        starts = jax.random.uniform(k_start, (T, K)) < fc.fail_rate
+        p = 1.0 / max(fc.repair_mean, 1.0)
+        u = jax.random.uniform(
+            k_dur, (T, K), minval=jnp.finfo(jnp.float32).tiny, maxval=1.0
+        )
+        dur = jnp.maximum(
+            jnp.ceil(jnp.log(u) / jnp.log1p(-p)), 1.0
+        ).astype(jnp.int32)
+        t_idx = jnp.arange(T)[:, None]
+        k_idx = jnp.arange(K)[None, :]
+        ends = jnp.minimum(t_idx + dur, T)
+        startsf = starts.astype(jnp.float32)
+        depth = jnp.zeros((T + 1, K), jnp.float32)
+        depth = depth.at[t_idx, k_idx].add(startsf)
+        depth = depth.at[ends, k_idx].add(-startsf)
+        active = jnp.cumsum(depth[:T], axis=0)
+        mult = mult * (1.0 - fc.fail_frac) ** active
+    if fc.drain_period > 0:
+        phase = jax.random.randint(k_drain, (K,), 0, fc.drain_period)
+        t = jnp.arange(T)[:, None]
+        draining = (t + phase[None, :]) % fc.drain_period < fc.drain_len
+        mult = jnp.where(draining, mult * (1.0 - fc.drain_frac), mult)
+    if fc.shock_rate > 0.0:
+        s_starts = jax.random.uniform(k_shock, (T, K)) < fc.shock_rate
+        cum = jnp.cumsum(s_starts.astype(jnp.int32), axis=0)
+        shifted = jnp.pad(cum, ((fc.shock_len, 0), (0, 0)))[:T]
+        mult = jnp.where((cum - shifted) > 0, mult * fc.shock_depth, mult)
+    return jnp.clip(mult, 0.0, 1.0)
+
+
 @lru_cache(maxsize=None)
 def _generator(st: DeviceStatics):
     """The compiled grid generator for one static-shape signature."""
@@ -180,25 +238,30 @@ def _generator(st: DeviceStatics):
             _build_works(stream_key(seed, "works"), st)
             if st.with_works else None
         )
-        return spec, arrivals, works
+        faults = (
+            _build_faults(stream_key(seed, "faults"), st)
+            if st.with_faults else None
+        )
+        return spec, arrivals, works, faults
 
     return jax.jit(jax.vmap(one))
 
 
-def make_batch(cfgs, with_works: bool = False):
-    """Device-resident ``trace.make_batch``: (spec, arrivals[, works]) with
-    every leaf carrying a leading (G,) axis, generated in one jitted vmapped
-    dispatch.
+def make_batch(cfgs, with_works: bool = False, with_faults: bool = False):
+    """Device-resident ``trace.make_batch``: (spec, arrivals, works, faults)
+    with every leaf carrying a leading (G,) axis, generated in one jitted
+    vmapped dispatch (``works``/``faults`` None unless requested).
 
     All configs must share (L, R, K, T) *and* the distributional statics
-    (density, jitter ranges, burst probability, work distribution) — the
-    per-point axes are seed, rho, contention, and utility, exactly the axes
-    ``sweep.make_grid`` varies. Utility kinds and beta are deterministic
-    per-point vectors, computed on host (trace.spec_kinds / trace.spec_beta)
-    and handed to the device program as stacked operands.
+    (density, jitter ranges, burst probability, work distribution, fault
+    process) — the per-point axes are seed, rho, contention, and utility,
+    exactly the axes ``sweep.make_grid`` varies. Utility kinds and beta are
+    deterministic per-point vectors, computed on host (trace.spec_kinds /
+    trace.spec_beta) and handed to the device program as stacked operands.
     """
     cfgs = trace.check_batch_cfgs(cfgs)
-    statics = {DeviceStatics.from_cfg(c, with_works) for c in cfgs}
+    statics = {DeviceStatics.from_cfg(c, with_works, with_faults)
+               for c in cfgs}
     if len(statics) > 1:
         raise ValueError(
             "device trace batches must share all static trace parameters "
@@ -223,7 +286,7 @@ def make_batch(cfgs, with_works: bool = False):
     beta = jnp.asarray(
         np.stack([trace.spec_beta(c) for c in cfgs]), jnp.float32
     )
-    spec, arrivals, works = _generator(st)(
+    spec, arrivals, works, faults = _generator(st)(
         seeds, rhos, contentions, kinds, beta
     )
-    return spec, arrivals, works
+    return spec, arrivals, works, faults

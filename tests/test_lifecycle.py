@@ -192,7 +192,7 @@ def test_run_consumes_device_synthesized_works():
     end to end with finite metrics — works plumbed straight from the
     trace_device batch, no host round-trip."""
     cfg = trace.TraceConfig(T=T, L=L, R=R, K=K, seed=1)
-    spec_b, arr_b, works_b = trace.make_batch(
+    spec_b, arr_b, works_b, _ = trace.make_batch(
         [cfg], with_works=True, trace_backend="device"
     )
     spec_row = jax.tree.map(lambda l: l[0], spec_b)

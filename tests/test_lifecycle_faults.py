@@ -1,0 +1,353 @@
+"""Fault-injected lifecycle: the PR 9 acceptance contract.
+
+* **Zero-fault bitwise equality** — ``faults=None`` compiles the pre-fault
+  program unchanged, and an all-ones fault stream is value-bitwise-equal
+  to it, for both OGA backends and every baseline including heSRPT. This
+  is the guarantee that landing the fault layer changed nothing for every
+  recorded fault-free experiment.
+* **Eviction semantics** — a scripted capacity collapse evicts exactly the
+  jobs that no longer fit, SRPT order keeps the closest-to-done jobs, and
+  evicted jobs re-queue with capped exponential backoff and their original
+  arrival slot (JCT anchors survive re-admission).
+* **Conservation** — accepted jobs = completed + still-running + queued +
+  fault-dropped, exactly, under heavy fault regimes (nothing is double
+  counted across evict/re-queue/drop cycles).
+* **Edge cases** — a zero-capacity slot neither deadlocks nor NaNs
+  (rate-floor draining); a job arriving into an outage is admitted, not
+  evicted, in the same slot (evictions run before arrivals); an exhausted
+  retry budget drops the job and the books still balance.
+* **FaultPolicy** — restart-from-zero wastes the discarded progress that
+  preserve_work checkpoints; the knob is jit-static and sweepable.
+* **Fingerprints** — fault configs and the fault policy both enter
+  ``sweep_fingerprint``: a resumed sweep can never silently mix fault
+  regimes.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sched import lifecycle, sweep, trace
+
+CFG = trace.TraceConfig(T=80, L=6, R=16, K=4, seed=0, work_mean=40.0)
+SPEC, ARR, WORKS = trace.make_lifecycle(CFG)
+
+
+def _leaves_equal(a, b, msg=""):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------- zero-fault bitwise equality --
+@pytest.mark.parametrize(
+    "name", lifecycle.ALGORITHMS + ("hesrpt",)
+)
+def test_all_ones_faults_bitwise_equal_fault_free(name):
+    """The acceptance bar: a fault-ENABLED run with zero fault probability
+    is bitwise-equal to today's fault-free run, per algorithm."""
+    base = lifecycle.run(SPEC, ARR, WORKS, name)
+    ones = lifecycle.run(
+        SPEC, ARR, WORKS, name,
+        faults=jnp.ones((CFG.T, CFG.K), jnp.float32),
+    )
+    _leaves_equal(base, ones, msg=name)
+
+
+@pytest.mark.parametrize("backend", ("fused", "reference"))
+def test_all_ones_faults_bitwise_equal_both_oga_backends(backend):
+    base = lifecycle.run(SPEC, ARR, WORKS, "ogasched", backend=backend)
+    ones = lifecycle.run(
+        SPEC, ARR, WORKS, "ogasched", backend=backend,
+        faults=jnp.ones((CFG.T, CFG.K), jnp.float32),
+    )
+    _leaves_equal(base, ones, msg=backend)
+
+
+def test_inactive_fault_config_runs_the_prefault_program():
+    """simulator.run_all with a fault-free config must pass faults=None —
+    the same compiled program, not an all-ones stream."""
+    from repro.sched.simulator import run_all
+
+    res = run_all(CFG, algorithms=("fairness",), mode="lifecycle")
+    direct = lifecycle.run(SPEC, ARR, WORKS, "fairness")
+    np.testing.assert_array_equal(
+        res["fairness"].rewards, np.asarray(direct.rewards)
+    )
+    want = lifecycle.summarize(direct, SPEC)
+    assert res["fairness"].lifecycle == pytest.approx(want)
+    assert want["evictions"] == 0 and want["wasted_work"] == 0
+
+
+def test_fault_shape_validation():
+    with pytest.raises(ValueError, match=r"\(T, K\)"):
+        lifecycle.run(
+            SPEC, ARR, WORKS, "fairness",
+            faults=jnp.ones((CFG.T, CFG.K + 1), jnp.float32),
+        )
+
+
+# ----------------------------------------------------------------- evictions --
+def _outage(t0, t1, depth=0.0):
+    """Fault stream: full capacity except multiplier ``depth`` on [t0, t1)."""
+    f = np.ones((CFG.T, CFG.K), np.float32)
+    f[t0:t1] = depth
+    return jnp.asarray(f)
+
+
+def _counts(tr):
+    return dict(
+        accepted=float(np.sum(np.asarray(ARR) > 0) - np.asarray(tr.dropped)[-1]),
+        completed=float(np.asarray(tr.departed).sum()),
+        running=float(np.asarray(tr.running)[-1].sum()),
+        queued=float(np.asarray(tr.q_depth)[-1].sum()),
+        rdropped=float(np.asarray(tr.rdropped)[-1]),
+        evictions=float(np.asarray(tr.evicted).sum()),
+    )
+
+
+@pytest.mark.parametrize("name", ("ogasched", "fairness", "binpacking"))
+def test_capacity_collapse_evicts_and_books_balance(name):
+    """A mid-trace outage must evict held jobs (capacity 0 fits nothing)
+    and the conservation identity must hold exactly: every accepted job is
+    completed, still running, still queued, or fault-dropped."""
+    tr = lifecycle.run(SPEC, ARR, WORKS, name, faults=_outage(21, 27))
+    c = _counts(tr)
+    assert c["evictions"] > 0, name
+    assert c["accepted"] == pytest.approx(
+        c["completed"] + c["running"] + c["queued"] + c["rdropped"]
+    ), (name, c)
+    # evictions happen only inside (or, via backoff re-admission churn,
+    # after) the outage — never before it
+    ev = np.asarray(tr.evicted)
+    assert not ev[:21].any()
+    for leaf in jax.tree.leaves(tr):
+        assert np.isfinite(np.asarray(leaf)).all(), name
+
+
+def test_hesrpt_is_malleable_and_never_evicts():
+    """Size-aware mode rebalances the whole allocation each slot, so a
+    capacity drop shrinks everyone's share instead of evicting anyone."""
+    tr = lifecycle.run(SPEC, ARR, WORKS, "hesrpt", faults=_outage(30, 40, 0.5))
+    assert np.asarray(tr.evicted).sum() == 0
+    assert np.asarray(tr.wasted).sum() == 0
+    assert np.asarray(tr.rdropped)[-1] == 0
+
+
+def test_conservation_under_heavy_stochastic_faults():
+    fc = trace.FaultConfig(fail_rate=0.05, fail_frac=0.5, repair_mean=30.0,
+                           shock_rate=0.02, shock_depth=0.3)
+    faults = trace.build_faults(dataclasses.replace(CFG, faults=fc))
+    for name in ("ogasched", "drf"):
+        tr = lifecycle.run(SPEC, ARR, WORKS, name, faults=faults)
+        c = _counts(tr)
+        assert c["accepted"] == pytest.approx(
+            c["completed"] + c["running"] + c["queued"] + c["rdropped"]
+        ), (name, c)
+
+
+def test_requeued_job_keeps_its_arrival_anchor():
+    """An evicted job that re-enters service must complete with a JCT
+    measured from its ORIGINAL arrival slot — the queue carries q_arr
+    through the eviction round-trip, so jct - svc_slots equals the
+    arrival-to-readmission gap exactly."""
+    L = CFG.L
+    arr = np.zeros((CFG.T, L), np.float32)
+    works = np.full((CFG.T, L), 500.0, np.float32)
+    arr[0, 0] = 1.0
+    # evicted at t=3 (backoff 2 -> ready at 5), capacity back at t=5:
+    # re-admitted at t=5 with a fresh full allocation
+    tr = lifecycle.run(
+        SPEC, jnp.asarray(arr), jnp.asarray(works), "fairness",
+        faults=_outage(3, 5),
+    )
+    assert np.asarray(tr.evicted)[3, 0]
+    adm = np.asarray(tr.admitted)[:, 0]
+    assert adm[0] and adm[5] and adm.sum() == 2
+    dep = np.asarray(tr.departed)[:, 0].astype(bool)
+    assert dep.any()
+    t_dep = int(np.nonzero(dep)[0][0])
+    jct = float(np.asarray(tr.jct)[t_dep, 0])
+    svc = float(np.asarray(tr.svc_slots)[t_dep, 0])
+    assert jct == t_dep + 1          # anchored at arrival slot 0
+    assert svc == t_dep - 5 + 1      # service clock restarted at readmission
+    assert jct - svc == 5            # the eviction round-trip, exactly
+
+
+# ---------------------------------------------------------------- edge cases --
+def test_zero_capacity_window_no_deadlock_no_nan():
+    """A full outage (multiplier 0 on every resource) must not deadlock:
+    jobs admitted during it drain at the rate floor, everything stays
+    finite, and completions resume after repair."""
+    tr = lifecycle.run(SPEC, ARR, WORKS, "ogasched", faults=_outage(10, 20))
+    for leaf in jax.tree.leaves(tr):
+        assert np.isfinite(np.asarray(leaf)).all()
+    c = _counts(tr)
+    assert c["accepted"] == pytest.approx(
+        c["completed"] + c["running"] + c["queued"] + c["rdropped"]
+    )
+    # the rate floor is the no-deadlock guarantee: even under a PERMANENT
+    # total outage a zero-allocation job still drains >= rate_floor per
+    # slot, so small jobs complete with no capacity at all
+    L = CFG.L
+    arr = np.zeros((CFG.T, L), np.float32)
+    arr[5, :] = 1.0
+    works = np.full((CFG.T, L), 2.5e-3, np.float32)  # ~3 floor-rate slots
+    dead = lifecycle.run(
+        SPEC, jnp.asarray(arr), jnp.asarray(works), "ogasched",
+        faults=jnp.zeros((CFG.T, CFG.K), jnp.float32),
+        rate_floor=1e-3,
+    )
+    for leaf in jax.tree.leaves(dead):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert np.asarray(dead.departed).sum() == L  # every job drained out
+
+
+def test_arrival_into_outage_is_admitted_not_evicted():
+    """Evictions run BEFORE arrivals in the slot order, so a job arriving
+    at the first outage slot is admitted against the collapsed capacity
+    (rate-floor service), never marked evicted on its arrival slot."""
+    L = CFG.L
+    arr = np.zeros((CFG.T, L), np.float32)
+    works = np.full((CFG.T, L), 2000.0, np.float32)
+    arr[2, 0] = 1.0   # running well before the outage (~27-slot job)
+    arr[10, 1] = 1.0  # arrives exactly when capacity collapses
+    tr = lifecycle.run(
+        SPEC, jnp.asarray(arr), jnp.asarray(works), "fairness",
+        faults=_outage(10, 14),
+    )
+    adm, ev = np.asarray(tr.admitted), np.asarray(tr.evicted)
+    assert adm[10, 1]          # admitted in its arrival slot
+    assert not ev[10, 1]       # and not evicted in that same slot
+    assert ev[10, 0]           # the held job IS evicted by the collapse
+    for leaf in jax.tree.leaves(tr):
+        assert np.isfinite(np.asarray(leaf)).all()
+
+
+def test_retry_budget_exhaustion_drops_and_conserves():
+    """max_retries=0: the first eviction spends the budget — the job is
+    dropped (rdropped), its progress counts as wasted work, and the
+    conservation identity still balances."""
+    L = CFG.L
+    arr = np.zeros((CFG.T, L), np.float32)
+    works = np.full((CFG.T, L), 1e6, np.float32)  # never completes
+    arr[0, 0] = 1.0
+    policy = lifecycle.FaultPolicy(max_retries=0)
+    tr = lifecycle.run(
+        SPEC, jnp.asarray(arr), jnp.asarray(works), "fairness",
+        faults=_outage(5, 8), fault_policy=policy,
+    )
+    assert np.asarray(tr.evicted).sum() == 1
+    assert np.asarray(tr.rdropped)[-1] == 1
+    assert np.asarray(tr.wasted).sum() > 0  # 5 slots of progress discarded
+    assert np.asarray(tr.running)[-1].sum() == 0
+    assert np.asarray(tr.q_depth)[-1].sum() == 0
+    # accepted 1 = completed 0 + running 0 + queued 0 + rdropped 1
+    assert np.asarray(tr.departed).sum() == 0
+
+
+def test_backoff_gates_readmission():
+    """After an eviction the job may not re-enter service before
+    t + backoff_base even if its port is idle."""
+    L = CFG.L
+    arr = np.zeros((CFG.T, L), np.float32)
+    works = np.full((CFG.T, L), 1e6, np.float32)
+    arr[0, 0] = 1.0
+    policy = lifecycle.FaultPolicy(backoff_base=8.0, max_retries=3)
+    tr = lifecycle.run(
+        SPEC, jnp.asarray(arr), jnp.asarray(works), "fairness",
+        faults=_outage(5, 6), fault_policy=policy,
+    )
+    adm = np.asarray(tr.admitted)[:, 0]
+    assert np.asarray(tr.evicted)[5, 0]
+    # evicted at t=5, first retry ready at 5 + 8 = 13: idle slots 6..12
+    # must show no admission on that port
+    assert not adm[6:13].any()
+    assert adm[13:].any()
+
+
+def test_restart_from_zero_wastes_what_preserve_work_keeps():
+    """One job, ~10 slots of progress, then an eviction: preserve_work
+    re-queues the residual (nothing wasted), restart-from-zero re-queues
+    the full size and books the discarded progress as wasted work."""
+    L = CFG.L
+    arr = np.zeros((CFG.T, L), np.float32)
+    works = np.full((CFG.T, L), 5000.0, np.float32)  # outlives the trace
+    arr[0, 0] = 1.0
+    faults = _outage(10, 12)
+    keep = lifecycle.run(
+        SPEC, jnp.asarray(arr), jnp.asarray(works), "fairness",
+        faults=faults, fault_policy=lifecycle.FaultPolicy(preserve_work=True),
+    )
+    restart = lifecycle.run(
+        SPEC, jnp.asarray(arr), jnp.asarray(works), "fairness",
+        faults=faults,
+        fault_policy=lifecycle.FaultPolicy(preserve_work=False),
+    )
+    assert np.asarray(keep.evicted).sum() == 1
+    assert np.asarray(restart.evicted).sum() == 1
+    w_keep = float(np.asarray(keep.wasted).sum())
+    w_restart = float(np.asarray(restart.wasted).sum())
+    assert w_keep == 0.0                   # progress checkpointed
+    done_pre = float(np.asarray(keep.work_done)[:10, 0].sum())
+    # the progress lost (svc_work - remaining vs summed per-slot drains:
+    # same quantity, float32-reassociated)
+    assert w_restart == pytest.approx(done_pre, rel=1e-4)
+    assert w_restart > 0.0
+    s_keep = lifecycle.summarize(keep, SPEC)
+    s_restart = lifecycle.summarize(restart, SPEC)
+    assert s_restart["goodput"] < s_keep["goodput"]
+
+
+# ------------------------------------------------------ metrics + fingerprint --
+def test_summarize_reports_robustness_metrics():
+    faults = _outage(21, 27, 0.2)
+    tr = lifecycle.run(SPEC, ARR, WORKS, "ogasched", faults=faults)
+    s = lifecycle.summarize(tr, SPEC)
+    for key in ("goodput", "wasted_work", "evictions", "fault_drops"):
+        assert key in s and np.isfinite(s[key])
+    assert s["evictions"] > 0
+    clean = lifecycle.summarize(lifecycle.run(SPEC, ARR, WORKS, "ogasched"),
+                                SPEC)
+    assert clean["evictions"] == 0 and clean["wasted_work"] == 0
+    assert s["goodput"] <= clean["goodput"] + 1e-6
+
+
+def test_recovery_time_semantics():
+    T = 400
+    f = np.ones((T, 2), np.float32)
+    assert lifecycle.recovery_time(np.ones(T), f) == 0.0  # never faults
+    f[100:120] = 0.0
+    r = np.ones(T)
+    r[100:150] = 0.0  # reward collapses, recovers 30 slots after repair
+    rec = lifecycle.recovery_time(r, f, window=10)
+    assert 0.0 < rec < np.inf
+    never = np.ones(T)
+    never[100:] = 0.0
+    assert lifecycle.recovery_time(never, f, window=10) == np.inf
+    # fault at slot 0: no pre-fault baseline exists
+    f0 = np.zeros((T, 2), np.float32)
+    assert np.isnan(lifecycle.recovery_time(np.ones(T), f0))
+
+
+def test_sweep_fingerprint_sensitive_to_faults_and_policy():
+    """A checkpointed sweep must refuse to resume across a change to the
+    fault regime OR the fault policy."""
+    base = [sweep.SweepPoint(cfg=CFG)]
+    faulted = [sweep.SweepPoint(cfg=dataclasses.replace(
+        CFG, faults=trace.FaultConfig(fail_rate=0.02)
+    ))]
+    fp = sweep.sweep_fingerprint(base, ("ogasched",), chunk_size=4,
+                             mode="lifecycle")
+    fp_f = sweep.sweep_fingerprint(faulted, ("ogasched",), chunk_size=4,
+                                   mode="lifecycle")
+    fp_p = sweep.sweep_fingerprint(
+        base, ("ogasched",), chunk_size=4, mode="lifecycle",
+        fault_policy=lifecycle.FaultPolicy(max_retries=1),
+    )
+    assert fp != fp_f
+    assert fp != fp_p
+    assert fp == sweep.sweep_fingerprint(base, ("ogasched",), chunk_size=4,
+                                         mode="lifecycle")

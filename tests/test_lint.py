@@ -326,6 +326,49 @@ def test_functional_scan_body_is_clean():
     assert _lint(IMPURE_SCAN_GOOD) == []
 
 
+# ------------------------------------------------------- unvalidated-capacity-mask
+# the PR 9 fault-lifecycle class: capacity minus usage ships a negative
+# residual once a capacity fault collapses c below what jobs already hold
+CAPACITY_MASK_BAD = """
+    import jax.numpy as jnp
+
+    def residual(spec, held, c_t):
+        used = held.sum(axis=0)
+        free = c_t - used
+        cap_left = spec.c - jnp.einsum("lrk->rk", held)
+        return free / jnp.maximum(cap_left, 1e-9)
+"""
+
+CAPACITY_MASK_GOOD = """
+    import jax.numpy as jnp
+
+    def residual(spec, held, c_t):
+        used = held.sum(axis=0)
+        free = jnp.maximum(c_t - used, 0.0)
+        cap_left = jnp.clip(spec.c - jnp.einsum("lrk->rk", held), 0.0)
+        feasible = (c_t - used >= -1e-4).all()  # checks READ the sign only
+        assert c_t.shape == used.shape
+        return jnp.where(feasible, free, cap_left)
+"""
+
+
+def test_unguarded_capacity_residual_is_flagged():
+    found = _lint(CAPACITY_MASK_BAD)
+    assert _rules_of(found) == {"unvalidated-capacity-mask"}
+    assert len(found) == 2  # c_t - used and spec.c - ...
+    msgs = " ".join(f.message for f in found)
+    assert "c_t" in msgs and "c" in msgs
+
+
+def test_clipped_residual_and_feasibility_check_are_clean():
+    assert _lint(CAPACITY_MASK_GOOD) == []
+
+
+def test_capacity_subtraction_of_constant_is_clean():
+    # c - 1.0 is a shift, not a residual against tracked usage
+    assert _lint("def f(c):\n    return c - 1.0\n") == []
+
+
 # ------------------------------------------------------------------ suppression
 def test_same_line_suppression():
     src = SEED_OFFSET_BAD.replace(
@@ -366,8 +409,8 @@ def test_syntax_error_is_a_finding_not_a_crash():
 
 
 # ------------------------------------------------------------- registry and API
-def test_at_least_eight_rules_registered():
-    assert len(RULES) >= 8
+def test_at_least_nine_rules_registered():
+    assert len(RULES) >= 9
     expected = {
         "aliased-buffer-dispatch",
         "rng-offset-derivation",
@@ -377,6 +420,7 @@ def test_at_least_eight_rules_registered():
         "nonhashable-jit-static",
         "donation-use-after-dispatch",
         "impure-scan-body",
+        "unvalidated-capacity-mask",
     }
     assert expected <= set(RULES)
 

@@ -145,6 +145,66 @@ def test_prefetch_survives_early_abandonment():
     it.close()  # GeneratorExit must unwind the prefetcher
 
 
+def _prefetch_workers():
+    import threading
+
+    return [
+        t for t in threading.enumerate()
+        if t.name == "sweep-chunk-prefetch" and t.is_alive()
+    ]
+
+
+def test_prefetch_midstream_exception_preserves_order():
+    """An exception raised by the source generator AFTER some items have
+    been produced must arrive in sequence: every preceding item first, then
+    the original exception — not a swallowed error or a hung queue.get."""
+    def gen():
+        yield "a"
+        yield "b"
+        raise RuntimeError("boom at item 3")
+
+    it = sweep._prefetched(gen(), depth=2)
+    assert next(it) == "a"
+    assert next(it) == "b"
+    with pytest.raises(RuntimeError, match="boom at item 3"):
+        next(it)
+    assert _prefetch_workers() == []  # the raise path also joins the worker
+
+
+def test_prefetch_exception_in_later_chunk_after_good_chunks():
+    """iter_batches level: a generation failure in chunk 1 must not stop
+    chunk 0 from arriving, and must surface as the original exception."""
+    points = sweep.make_grid(BASE, seeds=(0, 1, 2))
+    bad = points + [sweep.SweepPoint(
+        cfg=trace.TraceConfig(T=BASE.T, L=BASE.L, R=BASE.R + 1, K=BASE.K)
+    )]  # chunk 0 = 2 good points; chunk 1 mixes good + mismatched spec
+    it = sweep.iter_batches(bad, 2, prefetch=2)
+    sl, batch = next(it)
+    assert (sl.start, sl.stop) == (0, 2)
+    assert batch.size == 2
+    with pytest.raises(ValueError, match="share"):
+        list(it)
+    assert _prefetch_workers() == []
+
+
+def test_prefetch_close_joins_worker():
+    """Closing the consumer mid-stream must leave no live worker thread:
+    the finally-block join is the guard against a daemon thread being
+    killed mid-XLA-dispatch at interpreter teardown."""
+    import itertools
+    import time
+
+    it = sweep._prefetched(itertools.count(), depth=2)
+    assert next(it) == 0
+    it.close()
+    # close() runs the finally (stop + bounded join); the worker re-checks
+    # the stop flag every 0.1 s, so it must be gone almost immediately
+    deadline = time.monotonic() + 5.0
+    while _prefetch_workers() and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert _prefetch_workers() == []
+
+
 def test_resolve_trace_backend_rules():
     assert sweep.resolve_trace_backend("host", 10 ** 6) == "host"
     assert sweep.resolve_trace_backend("device", 1) == "device"

@@ -85,6 +85,40 @@ def test_streams_independent_across_adjacent_seeds():
     )
 
 
+def test_job_manager_cluster_stream_discipline():
+    """build_cluster draws from the "cluster" stream, not a raw
+    default_rng(seed): raw seeding made build_cluster(seed=s) bit-share
+    with ANY other component seeded s (the collision class the stream
+    split above exists to kill). Deterministic per seed, distinct across
+    seeds, and distinct from the raw-seed draw it used to make."""
+    from repro.sched import job_manager
+
+    jobs = [
+        job_manager.JobTemplate(arch=f"a{i}", chips=4.0, hbm_gb=8.0)
+        for i in range(3)
+    ]
+    s1 = job_manager.build_cluster(jobs, n_hosts=16, seed=0)
+    s2 = job_manager.build_cluster(jobs, n_hosts=16, seed=0)
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    s3 = job_manager.build_cluster(jobs, n_hosts=16, seed=1)
+    assert not np.array_equal(np.asarray(s1.c), np.asarray(s3.c))
+    # the first draw build_cluster makes is uniform(0.9, 1.1, (n_hosts, K));
+    # with the old raw seeding it was bitwise this:
+    raw = np.random.default_rng(0).uniform(
+        0.9, 1.1, (16, len(job_manager.RES))
+    )
+    stream = trace.stream_rng(0, "cluster").uniform(
+        0.9, 1.1, (16, len(job_manager.RES))
+    )
+    assert not np.array_equal(raw, stream)
+    np.testing.assert_allclose(
+        np.asarray(s1.c),
+        np.array([4.0, 64.0, 16.0, 96.0, 256.0, 100.0])[None, :] * stream,
+        rtol=1e-6,
+    )
+
+
 def test_trace_golden_pins():
     """Pin the post-SeedSequence traces: any future change to stream
     derivation or draw order must update these deliberately."""
@@ -141,11 +175,95 @@ def test_host_traces_bitwise_pinned(cfg):
     got = (_sha16(*jax.tree.leaves(spec)), _sha16(arr), _sha16(works))
     assert got == want, f"host trace bits changed: {got} != {want}"
     # make_batch(trace_backend="host") must be exactly the stacked goldens
-    spec_b, arr_b, works_b = trace.make_batch(
+    spec_b, arr_b, works_b, _ = trace.make_batch(
         [cfg], with_works=True, trace_backend="host"
     )
     assert _sha16(*jax.tree.leaves(spec_b)) == want[0]
     assert (_sha16(arr_b[0]), _sha16(works_b[0])) == want[1:]
+
+
+# SHA-256 (first 16 hex chars) of the (T, K) fault multiplier tensor,
+# recorded when build_faults landed (PR 9). The fault stream is part of the
+# bitwise-pinned host contract: recorded fault experiments must replay.
+FAULT_GOLD = {
+    "failures": "d6074d6834f7b49d",
+    "all-families": "f8c0646d99679a61",
+}
+
+
+@pytest.mark.parametrize(
+    "name,cfg",
+    [
+        ("failures", trace.TraceConfig(
+            T=64, L=4, R=8, K=4, seed=0,
+            faults=trace.FaultConfig(
+                fail_rate=0.05, fail_frac=0.3, repair_mean=20.0
+            ))),
+        ("all-families", trace.TraceConfig(
+            T=100, L=6, R=16, K=4, seed=3,
+            faults=trace.FaultConfig(
+                fail_rate=0.02, drain_period=30, drain_len=10,
+                shock_rate=0.03, shock_depth=0.5
+            ))),
+    ],
+    ids=["failures", "all-families"],
+)
+def test_build_faults_bitwise_pinned(name, cfg):
+    f = np.asarray(trace.build_faults(cfg))
+    assert f.shape == (cfg.T, cfg.K)
+    assert f.dtype == np.float32
+    assert (f >= 0.0).all() and (f <= 1.0).all()
+    assert (f < 1.0).any()  # the regimes above actually fault
+    assert _sha16(f) == FAULT_GOLD[name], "fault stream bits changed"
+
+
+def test_build_faults_inactive_is_ones_and_rng_free():
+    """A fault-free config must return exactly 1.0 everywhere WITHOUT
+    consuming the "faults" stream — so enabling faults later on one config
+    cannot perturb any other stream, and fault-free goldens never move."""
+    cfg = trace.TraceConfig(T=40, L=4, R=8, K=4, seed=0)
+    assert not cfg.faults.active
+    np.testing.assert_array_equal(
+        np.asarray(trace.build_faults(cfg)), np.ones((40, 4), np.float32)
+    )
+    # the stream itself is untouched: first draw matches a fresh generator
+    np.testing.assert_array_equal(
+        trace.stream_rng(0, "faults").uniform(size=8),
+        trace.stream_rng(0, "faults").uniform(size=8),
+    )
+
+
+def test_make_batch_with_faults_stacks_and_defaults_ones():
+    """with_faults=True stacks per-config (T, K) multipliers; fault-free
+    configs in a mixed batch contribute all-ones rows."""
+    fc = trace.FaultConfig(fail_rate=0.05)
+    cfgs = [
+        trace.TraceConfig(T=30, L=4, R=8, K=4, seed=0, faults=fc),
+        trace.TraceConfig(T=30, L=4, R=8, K=4, seed=1),  # fault-free
+    ]
+    _, _, _, faults = trace.make_batch(cfgs, with_faults=True)
+    assert faults.shape == (2, 30, 4)
+    np.testing.assert_array_equal(
+        np.asarray(faults[0]), np.asarray(trace.build_faults(cfgs[0]))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(faults[1]), np.ones((30, 4), np.float32)
+    )
+
+
+def test_fault_stream_independent_of_other_streams():
+    """Enabling faults must not change the spec/arrivals/works bits of the
+    same config — the fault stream is its own SeedSequence child."""
+    base = trace.TraceConfig(T=64, L=4, R=8, K=4, seed=0)
+    faulted = dataclasses.replace(
+        base, faults=trace.FaultConfig(fail_rate=0.1)
+    )
+    for a, b in zip(
+        [x for x in trace.make_lifecycle(base)],
+        [x for x in trace.make_lifecycle(faulted)],
+    ):
+        for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
 
 def test_build_works_seeded_heavy_tailed():
@@ -170,11 +288,12 @@ def test_make_lifecycle_shapes():
 
 def test_make_batch_stacks_per_config_traces():
     cfgs = [trace.TraceConfig(T=30, L=4, R=8, K=4, seed=s) for s in range(3)]
-    spec, arr, works = trace.make_batch(cfgs)
+    spec, arr, works, faults = trace.make_batch(cfgs)
     assert works is None  # slot mode: job sizes never sampled
+    assert faults is None  # fault streams only on request
     assert arr.shape == (3, 30, 4)
     assert spec.c.shape == (3, 8, 4)
-    spec_b, arr_b, works_b = trace.make_batch(cfgs, with_works=True)
+    spec_b, arr_b, works_b, _ = trace.make_batch(cfgs, with_works=True)
     assert works_b.shape == (3, 30, 4)
     for g, cfg in enumerate(cfgs):
         s1, a1, w1 = trace.make_lifecycle(cfg)

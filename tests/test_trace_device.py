@@ -14,8 +14,9 @@ SEEDS = (0, 1, 2)
 
 
 def _device_batch(cfgs, with_works=False):
+    # first three leaves only — fault-stream parity has its own tests
     return trace.make_batch(cfgs, with_works=with_works,
-                            trace_backend="device")
+                            trace_backend="device")[:3]
 
 
 # ------------------------------------------------------- statistical parity --
@@ -214,7 +215,7 @@ def test_device_batch_rejects_mixed_statics():
     mixed = cfgs + [dataclasses.replace(
         cfgs[0], seed=1, rho=0.3, contention=20.0, utility="log"
     )]
-    spec, arr, _ = trace_device.make_batch(mixed)
+    spec, arr, _, _ = trace_device.make_batch(mixed)
     assert arr.shape == (2, 30, 4)
     assert not np.array_equal(
         np.asarray(spec.kinds[0]), np.asarray(spec.kinds[1])
@@ -238,3 +239,65 @@ def test_make_batch_rejects_unknown_backend():
     cfgs = [trace.TraceConfig(T=10, L=4, R=8, K=4)]
     with pytest.raises(ValueError):
         trace.make_batch(cfgs, trace_backend="gpu")
+
+
+# ------------------------------------------------------ fault stream parity --
+def test_fault_stream_statistical_parity():
+    """The device fault process matches the host process statistically per
+    regime: mean surviving capacity, worst-case depth, and the fraction of
+    faulted (t, k) cells. (Bitwise identity is impossible — threefry vs
+    PCG64 — so the host stream stays the bitwise golden and the device twin
+    is held to distribution parity, like the other trace components.)"""
+    regimes = {
+        "failures": trace.FaultConfig(
+            fail_rate=0.03, fail_frac=0.3, repair_mean=30.0
+        ),
+        "drains": trace.FaultConfig(
+            drain_period=100, drain_len=25, drain_frac=0.5
+        ),
+        "shocks": trace.FaultConfig(shock_rate=0.02, shock_depth=0.5),
+    }
+    for name, fc in regimes.items():
+        host_stats, dev_stats = [], []
+        for seed in SEEDS:
+            cfg = trace.TraceConfig(
+                T=4000, L=4, R=8, K=6, seed=seed, faults=fc
+            )
+            h = np.asarray(trace.build_faults(cfg))
+            d = np.asarray(
+                trace.make_batch(
+                    [cfg], with_faults=True, trace_backend="device"
+                )[3][0]
+            )
+            assert d.shape == h.shape == (4000, 6)
+            assert (d >= 0.0).all() and (d <= 1.0).all()
+            host_stats.append((h.mean(), h.min(), (h < 1.0).mean()))
+            dev_stats.append((d.mean(), d.min(), (d < 1.0).mean()))
+        hm, hmin, hfrac = np.mean(host_stats, axis=0)
+        dm, dmin, dfrac = np.mean(dev_stats, axis=0)
+        assert dm == pytest.approx(hm, abs=0.03), name
+        assert dfrac == pytest.approx(hfrac, abs=0.05), name
+        assert dmin == pytest.approx(hmin, abs=0.2), name
+
+
+def test_fault_stream_gating_and_family_independence():
+    """with_faults=False returns faults=None; a fault-free config under
+    with_faults=True returns all-ones; and disabling one family does not
+    shift another family's bits (per-family key splits)."""
+    base = trace.TraceConfig(T=200, L=4, R=8, K=4, seed=0)
+    assert trace_device.make_batch([base])[3] is None
+    _, _, _, ones = trace_device.make_batch([base], with_faults=True)
+    np.testing.assert_array_equal(
+        np.asarray(ones[0]), np.ones((200, 4), np.float32)
+    )
+    drains = trace.FaultConfig(drain_period=50, drain_len=10)
+    both = dataclasses.replace(
+        drains, shock_rate=0.05, shock_depth=0.0  # shocks zero capacity
+    )
+    f_dr = np.asarray(trace_device.make_batch(
+        [dataclasses.replace(base, faults=drains)], with_faults=True)[3][0])
+    f_both = np.asarray(trace_device.make_batch(
+        [dataclasses.replace(base, faults=both)], with_faults=True)[3][0])
+    # wherever no shock fired, the drain pattern is bit-identical
+    unshocked = f_both > 0.0
+    np.testing.assert_array_equal(f_both[unshocked], f_dr[unshocked])

@@ -2,6 +2,15 @@
 artifact; timings indicative only) vs jnp reference vs paper-verbatim Alg.1.
 On TPU the same entry points dispatch to compiled Pallas (kernels/ops.py).
 
+Beyond the historical sections this now drives the kernel *graduation*
+machinery: per-shape autotuning (kernels.autotune — winners cached on
+disk, hand-picked-tiling A/B from the same measurement table),
+sortscan-vs-bisect method A/B, the measured roofline of the production
+dispatch (analysis.roofline.kernel_roofline), and the warmed-path pin
+(zero autotune measurements, zero cache misses) the CI kernel-gate fails
+on. Every autotune/roofline record carries ``ops.backend_provenance`` so
+"auto" rows are unambiguous about which path ran.
+
 Returns machine-readable records; ``benchmarks/run.py`` writes them to
 ``BENCH_kernels.json`` (projection + fused-step timings) so the kernel perf
 trajectory is tracked across PRs alongside ``BENCH_sweep.json``.
@@ -15,8 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed
+from repro.analysis import roofline as roofline_mod
 from repro.core import projection
-from repro.kernels import ref
+from repro.kernels import autotune, ops, ref
 from repro.kernels.proj_bisect import ITERS, proj_bisect
 
 
@@ -135,6 +145,140 @@ def run(quick: bool = True) -> list[dict]:
     errf = float(jnp.max(jnp.abs(out_f - jit_unfused(z, a, mask, x, kstar, scal))))
     emit("kernel.oga_step.fused_pallas", 0.0, f"max_err={errf:.2e};1 HBM pass")
     rec("kernel.oga_step.fused_pallas", 0.0, max_err_vs_rows=errf)
+
+    # ---- shape-aware autotuning: cached winners, hand-picked A/B, and the
+    # sortscan-vs-bisect method A/B, all per packed shape. The hand-picked
+    # comparison reads BOTH numbers from ONE tune() measurement table, so
+    # "autotuned >= hand-picked on every shape" is a property of the same
+    # run, not of two noisy runs racing each other.
+    prov = ops.backend_provenance("auto")
+    interpret = prov["platform"] != "tpu"
+    reps = 2 if interpret else 20
+    tune_shapes = (
+        [(256, 10), (128, 64), (64, 200)] if quick
+        else [(1024, 16), (512, 64), (128, 256)]
+    )
+    hand_key = f"rb{autotune.DEFAULT_ROW_BLOCK}-sortscan"
+    for Nt, Lt in tune_shapes:
+        win, measured = autotune.tune("oga_step", Nt, Lt, repeats=reps)
+        win_us = min(measured.values())
+        hand_us = measured[hand_key]  # rb8 is always a legal candidate
+        speed = round(hand_us / max(win_us, 1e-9), 3)
+        emit(f"kernel.autotune.oga_step.N={Nt}.L={Lt}", win_us,
+             f"winner=rb{win.row_block}-{win.method};"
+             f"handpicked={hand_us:.0f}us;speedup={speed};"
+             f"interpret={interpret}")
+        rec("kernel.autotune.oga_step", win_us, N=Nt, L=Lt,
+            winner=win.to_dict(), measured_us=measured,
+            handpicked_us=round(hand_us, 2),
+            speedup_vs_handpicked=speed, interpret=interpret, **prov)
+        # method A/B at the winner's tile: exact sortscan vs the seeded
+        # bisect fallback at each legal iteration count (not stored — the
+        # dispatch cache keeps only value-deterministic sortscan winners)
+        _, bis = autotune.tune(
+            "oga_step", Nt, Lt, repeats=reps, store=False,
+            cands=[autotune.KernelConfig(win.row_block, "bisect", it)
+                   for it in autotune.BISECT_ITERS],
+        )
+        bis_us = min(bis.values())
+        emit(f"kernel.ab.oga_step_method.N={Nt}.L={Lt}", bis_us,
+             f"sortscan={win_us:.0f}us;bisect={bis_us:.0f}us;"
+             f"bisect_over_sortscan={bis_us / max(win_us, 1e-9):.2f}")
+        rec("kernel.ab.oga_step_method", bis_us, N=Nt, L=Lt,
+            sortscan_us=round(win_us, 2), bisect_us=round(bis_us, 2),
+            bisect_measured_us=bis,
+            bisect_over_sortscan=round(bis_us / max(win_us, 1e-9), 3),
+            interpret=interpret)
+    # the standalone projection kernel tunes too (one shape is enough to
+    # exercise the second cache key family per release)
+    Nt, Lt = tune_shapes[1]
+    winp, measp = autotune.tune("proj", Nt, Lt, repeats=reps)
+    winp_us = min(measp.values())
+    emit(f"kernel.autotune.proj.N={Nt}.L={Lt}", winp_us,
+         f"winner=rb{winp.row_block}-{winp.method};"
+         f"handpicked={measp[hand_key]:.0f}us;interpret={interpret}")
+    rec("kernel.autotune.proj", winp_us, N=Nt, L=Lt,
+        winner=winp.to_dict(), measured_us=measp,
+        handpicked_us=round(measp[hand_key], 2),
+        speedup_vs_handpicked=round(measp[hand_key] / max(winp_us, 1e-9), 3),
+        interpret=interpret, **prov)
+
+    # ---- measured roofline: achieved vs peak bytes/flops of the
+    # PRODUCTION fused dispatch (compiled Pallas on TPU; the packed-row jnp
+    # path elsewhere — interpret-mode Pallas timings would measure the
+    # interpreter, not the kernel). Peaks are host-calibrated off-TPU, and
+    # the flop model follows the implementation that actually ran: the
+    # matmul-sortscan count on TPU, the jnp sort+sweep count elsewhere.
+    from repro.kernels.oga_step import pack_scal
+
+    model_method = "sortscan" if prov["fused_impl"] == "pallas" else "rows"
+    for Nt, Lt in tune_shapes:
+        zt = jax.random.normal(kz, (Nt, Lt)) * 5
+        at = jax.random.uniform(ka, (Nt, Lt), minval=0.1, maxval=4.0)
+        mt = jnp.ones((Nt, Lt))
+        ct = jax.random.uniform(kc, (Nt,), minval=0.5, maxval=8.0)
+        xt = (jax.random.uniform(kz, (Nt, Lt)) < 0.7).astype(jnp.float32)
+        kt = (jax.random.uniform(ka, (Nt, Lt)) < 0.2).astype(jnp.float32)
+        st = pack_scal(
+            jnp.full((Nt,), 1.2), jnp.full((Nt,), 0.4), ct,
+            jnp.asarray(np.arange(Nt) % 4, jnp.float32),
+            jnp.full((Nt,), 0.5),
+        )
+        jit_prod = jax.jit(
+            lambda y, a_, m_, x_, k_, s_: ops.oga_step_fused(y, a_, m_, x_, k_, s_)
+        )
+        jit_prod(zt, at, mt, xt, kt, st).block_until_ready()
+        _, us_p = timed(jit_prod, zt, at, mt, xt, kt, st, repeats=20)
+        rl = roofline_mod.kernel_roofline(
+            "oga_step", Nt, Lt, us_p, method=model_method,
+            platform=prov["platform"],
+        )
+        emit(f"kernel.roofline.oga_step.N={Nt}.L={Lt}", us_p,
+             f"dom={rl['dominant']};"
+             f"frac_bytes={rl['frac_peak_bytes']:.3f};"
+             f"frac_flops={rl['frac_peak_flops']:.3f};"
+             f"impl={prov['fused_impl']}")
+        records.append({"name": "kernel.roofline.oga_step",
+                        "N": Nt, "L": Lt, **rl, **prov})
+    jit_proj = jax.jit(lambda z_, a_, m_, c_: ops.proj_sortscan(z_, a_, m_, c_))
+    Nt, Lt = tune_shapes[1]
+    zt = jax.random.normal(kz, (Nt, Lt)) * 5
+    at = jax.random.uniform(ka, (Nt, Lt), minval=0.1, maxval=4.0)
+    mt = jnp.ones((Nt, Lt))
+    ct = jax.random.uniform(kc, (Nt,), minval=0.5, maxval=8.0)
+    jit_proj(zt, at, mt, ct).block_until_ready()
+    _, us_pr = timed(jit_proj, zt, at, mt, ct, repeats=20)
+    rl = roofline_mod.kernel_roofline(
+        "proj", Nt, Lt, us_pr, method=model_method, platform=prov["platform"]
+    )
+    emit(f"kernel.roofline.proj.N={Nt}.L={Lt}", us_pr,
+         f"dom={rl['dominant']};frac_bytes={rl['frac_peak_bytes']:.3f};"
+         f"impl={prov['fused_impl']}")
+    records.append({"name": "kernel.roofline.proj", "N": Nt, "L": Lt,
+                    **rl, **prov})
+
+    # ---- warmed-path pin: with the cache warmed by the tunes above, the
+    # dispatch path must resolve every tiling from the table — ZERO
+    # autotune measurements, ZERO misses. The CI kernel-gate fails on
+    # either counter moving.
+    autotune.reset_stats()
+    Nt, Lt = tune_shapes[0]
+    zt = jax.random.normal(kz, (Nt, Lt)) * 5
+    at = jax.random.uniform(ka, (Nt, Lt), minval=0.1, maxval=4.0)
+    mt = jnp.ones((Nt, Lt))
+    ct = jax.random.uniform(kc, (Nt,), minval=0.5, maxval=8.0)
+    xt = (jax.random.uniform(kz, (Nt, Lt)) < 0.7).astype(jnp.float32)
+    kt = (jax.random.uniform(ka, (Nt, Lt)) < 0.2).astype(jnp.float32)
+    st = pack_scal(
+        jnp.full((Nt,), 1.2), jnp.full((Nt,), 0.4), ct,
+        jnp.asarray(np.arange(Nt) % 4, jnp.float32), jnp.full((Nt,), 0.5),
+    )
+    ops.oga_step_fused(zt, at, mt, xt, kt, st, use_pallas=True).block_until_ready()
+    stats = autotune.cache_stats()
+    emit("kernel.autotune.warmed_path", 0.0,
+         f"measurements={stats['measurements']};hits={stats['hits']};"
+         f"misses={stats['misses']}")
+    rec("kernel.autotune.warmed_path", 0.0, **stats)
 
     # flash attention vs blockwise jnp
     from repro.kernels.flash_attention import flash_attention

@@ -1,32 +1,71 @@
-"""Emit the §Roofline table from the dry-run artifacts (analysis/roofline)."""
+"""Roofline table emission: dry-run artifacts + measured kernel records.
+
+One entry point (``run``) emits BOTH roofline views, so a single
+``benchmarks/run.py`` invocation produces the complete table:
+
+* the §Roofline *dry-run* rows from ``artifacts/dryrun/*.json`` (compiled
+  HLO estimates; derivation shared with analysis/report via
+  ``analysis.roofline.dryrun_summary`` — the former duplicate formatting
+  path is gone), and
+* the *measured* kernel rows from the records ``bench_kernels.run`` just
+  produced (achieved vs peak bytes/flops per shape —
+  ``analysis.roofline.kernel_roofline`` output, re-emitted here as CSV).
+"""
 from __future__ import annotations
 
 import glob
 import json
+from typing import Optional, Sequence
 
 from benchmarks.common import emit
+from repro.analysis.roofline import dryrun_summary
 
 
-def run(art_dir: str = "artifacts/dryrun"):
+def run_dryrun(art_dir: str = "artifacts/dryrun") -> None:
     for p in sorted(glob.glob(f"{art_dir}/*.json")):
         r = json.load(open(p))
+        s = dryrun_summary(r)
         tag = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
-        if r["status"] == "skipped":
-            emit(tag, 0.0, "skipped:" + r["reason"][:60])
+        if s["status"] == "skipped":
+            emit(tag, 0.0, "skipped:" + s["reason"][:60])
             continue
-        if r["status"] != "ok":
+        if s["status"] != "ok":
             emit(tag, 0.0, "ERROR")
             continue
-        rl = r["roofline"]
-        ratio = r.get("model_flops", 0) / max(rl["hlo_flops_global"], 1)
         emit(
             tag,
-            rl["t_compute_s"] * 1e6,
-            f"dom={rl['dominant']};t_comp={rl['t_compute_s']:.4f}s;"
-            f"t_mem={rl['t_memory_s']:.4f}s;t_coll={rl['t_collective_s']:.4f}s;"
-            f"useful_flops={ratio:.2f};"
-            f"tempGB={r['memory'].get('temp_size_in_bytes', 0) / 1e9:.1f}",
+            s["t_compute_s"] * 1e6,
+            f"dom={s['dominant']};t_comp={s['t_compute_s']:.4f}s;"
+            f"t_mem={s['t_memory_s']:.4f}s;t_coll={s['t_collective_s']:.4f}s;"
+            f"useful_flops={s['useful_flops']:.2f};"
+            f"tempGB={s['temp_gb']:.1f}",
         )
+
+
+def run_measured(kernel_records: Sequence[dict]) -> None:
+    """Emit the measured-kernel roofline rows from bench_kernels records."""
+    for r in kernel_records:
+        if not str(r.get("name", "")).startswith("kernel.roofline."):
+            continue
+        emit(
+            f"{r['name']}.{r['shape']}",
+            r["us"],
+            f"dom={r['dominant']};"
+            f"achieved_GBs={r['achieved_bytes_s'] / 1e9:.2f};"
+            f"achieved_GFs={r['achieved_flops_s'] / 1e9:.2f};"
+            f"frac_bytes={r['frac_peak_bytes']:.3f};"
+            f"frac_flops={r['frac_peak_flops']:.3f};"
+            f"calibrated={r['peaks_calibrated']}",
+        )
+
+
+def run(
+    art_dir: str = "artifacts/dryrun",
+    kernel_records: Optional[Sequence[dict]] = None,
+) -> None:
+    run_dryrun(art_dir)
+    if kernel_records:
+        run_measured(kernel_records)
 
 
 if __name__ == "__main__":

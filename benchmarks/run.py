@@ -71,6 +71,9 @@ def main() -> None:
         with open(args.kernels_json, "w") as f:
             json.dump(records, f, indent=2)
         print(f"# wrote {len(records)} kernel records to {args.kernels_json}")
+        # one invocation emits BOTH roofline views: the dry-run table and
+        # the measured-kernel rows just benchmarked
+        bench_roofline.run(kernel_records=records)
 
     def regret_section():
         records = bench_regret.run(quick)
@@ -97,7 +100,6 @@ def main() -> None:
         ("lifecycle_jct", lambda: bench_lifecycle.run(quick)),
         ("lifecycle_faults", faults_section),
         ("kernels", kernels_section),
-        ("roofline", bench_roofline.run),
     ]
     for name, fn in sections:
         if args.only and args.only not in name:

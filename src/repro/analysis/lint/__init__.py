@@ -25,6 +25,10 @@ impure-scan-body            scan bodies must be pure or trace-time effects
 unvalidated-capacity-mask   fault-injected lifecycle: capacity minus usage
                             with no clip guard goes negative when capacity
                             collapses below held allocations (PR 9)
+hardcoded-tiling            the PR 4 hand-picked ROW_BLOCK = 8 outlived the
+                            autotuner that superseded it; tile constants
+                            outside kernels/autotune.py fork the config
+                            space the tuner searches (PR 10)
 ==========================  =================================================
 
 Usage::
@@ -56,6 +60,7 @@ from repro.analysis.lint import (  # noqa: E402,F401
     rules_ckpt,
     rules_jit,
     rules_rng,
+    rules_tiling,
 )
 from repro.analysis.lint.reporters import (  # noqa: F401
     render_json,

@@ -1,0 +1,140 @@
+"""Kernel tiling-constant locality rule.
+
+PR 10 moved every tile shape the Pallas kernels run under (row blocks,
+lane/sublane floors, bisect iteration counts, flash-attention q/k blocks)
+into ``kernels/autotune.py`` — the single module the shape-aware autotuner
+enumerates, measures, and caches winners from. A tile constant spelled out
+anywhere else silently forks the config space: the autotuner keeps tuning
+the real knob while the stray literal pins some call site to a stale
+shape, and the two drift apart with no test to notice (exactly how the PR
+4 hand-picked ``ROW_BLOCK = 8`` survived four releases after it stopped
+being the right answer).
+
+The rule rejects, everywhere except ``kernels/autotune.py``:
+
+* module/class-level assignments of integer literals (or tuples of them)
+  to tiling-named constants — ``ROW_BLOCK*``, ``*BLOCK*``, ``*TILE*``,
+  ``*LANE*``/``*SUBLANE*``, bare ``ITERS`` or ``*BISECT_ITERS`` (name
+  your non-tiling iteration counts specifically, e.g.
+  ``MULTICLASS_ITERS``, and they pass); reference the ``autotune``
+  constant instead, and
+* integer literals >= the sublane granularity inside the block-shape
+  tuple of a ``pl.BlockSpec(...)`` — block shapes must come from the
+  resolved config (singleton grid dims like the leading 1s of an
+  attention spec are fine).
+
+At most one ``# lint: disable=hardcoded-tiling`` suppression is tolerated
+repo-wide, reserved for a genuinely immovable hardware constant (the
+Pallas lane-width floor); ``tests/test_lint.py`` counts them.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from repro.analysis.lint import astutil
+from repro.analysis.lint.core import Finding, FileContext, Rule, register
+
+# the one module allowed to spell out tile integers
+TILING_HOME = "kernels/autotune.py"
+
+# integers below this inside a BlockSpec are singleton/grid dims, not tiles
+_LITERAL_FLOOR = 8
+
+_TILING_NAME = re.compile(
+    r"^_?("
+    r"[A-Z0-9_]*BLOCK[A-Z0-9_]*"      # ROW_BLOCK, BLOCK_Q, FLASH_BLOCK_K...
+    r"|[A-Z0-9_]*TILE[A-Z0-9_]*"      # TILE_M, KV_TILES...
+    r"|[A-Z0-9_]*SUBLANE[A-Z0-9_]*"   # SUBLANE_FLOOR...
+    r"|[A-Z0-9_]*LANES?(_[A-Z0-9_]+)?"  # LANE_FLOOR, SCAL_LANES...
+    r"|ITERS|[A-Z0-9_]*BISECT_ITERS"  # the kernel knob; MULTICLASS_ITERS passes
+    r")$"
+)
+
+
+def _int_literal_value(node: ast.expr):
+    """The int (or tuple-of-int) literal value of ``node``, else None."""
+    if isinstance(node, ast.Constant) and type(node.value) is int:
+        return node.value
+    if isinstance(node, (ast.Tuple, ast.List)) and node.elts and all(
+        isinstance(e, ast.Constant) and type(e.value) is int
+        for e in node.elts
+    ):
+        return tuple(e.value for e in node.elts)
+    return None
+
+
+@register
+class HardcodedTiling(Rule):
+    name = "hardcoded-tiling"
+    summary = (
+        "tile shape spelled as an integer literal outside kernels/autotune.py"
+        " — forks the autotuner's config space; reference the autotune "
+        "constant or the resolved KernelConfig"
+    )
+
+    def run(self, module: ast.Module, ctx: FileContext) -> Iterator[Finding]:
+        if ctx.path.replace("\\", "/").endswith(TILING_HOME):
+            return
+        yield from self._named_constants(module, ctx)
+        yield from self._blockspec_literals(module, ctx)
+
+    def _named_constants(self, module: ast.Module, ctx) -> Iterator[Finding]:
+        # module- and class-level bindings only: a local ``rb = 8`` inside a
+        # helper is the BlockSpec check's business where it matters
+        scopes = [module.body] + [
+            n.body for n in module.body if isinstance(n, ast.ClassDef)
+        ]
+        for body in scopes:
+            for stmt in body:
+                if isinstance(stmt, ast.Assign):
+                    targets, value = stmt.targets, stmt.value
+                elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                    targets, value = [stmt.target], stmt.value
+                else:
+                    continue
+                val = _int_literal_value(value)
+                if val is None:
+                    continue
+                for t in targets:
+                    if isinstance(t, ast.Name) and _TILING_NAME.match(t.id):
+                        yield self.finding(
+                            ctx, stmt,
+                            f"tiling constant '{t.id} = {ast.unparse(value)}' "
+                            "hardcoded outside kernels/autotune.py — the "
+                            "autotuner tunes a different knob than this call "
+                            "site runs; move the literal into autotune.py "
+                            "and reference it",
+                        )
+
+    def _blockspec_literals(self, module: ast.Module, ctx) -> Iterator[Finding]:
+        imports = astutil.Imports(module)
+        for node in ast.walk(module):
+            if not isinstance(node, ast.Call):
+                continue
+            cn = imports.resolve(node.func) or ""
+            if not (
+                cn.endswith(".BlockSpec")
+                or (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "BlockSpec")
+            ):
+                continue
+            if not node.args:
+                continue
+            shape = node.args[0]
+            if not isinstance(shape, (ast.Tuple, ast.List)):
+                continue
+            for e in shape.elts:
+                if (
+                    isinstance(e, ast.Constant)
+                    and type(e.value) is int
+                    and e.value >= _LITERAL_FLOOR
+                ):
+                    yield self.finding(
+                        ctx, e,
+                        f"integer tile {e.value} hardcoded in a BlockSpec "
+                        "block shape — block shapes must come from the "
+                        "autotune-resolved config (kernels/autotune.py), not "
+                        "a literal the tuner cannot see",
+                    )

@@ -8,7 +8,7 @@ import argparse
 import glob
 import json
 
-from repro.analysis.roofline import PEAK_FLOPS
+from repro.analysis.roofline import PEAK_FLOPS, dryrun_summary
 
 IMPROVE = {
     ("compute", "train"): "cut remat recompute (dots policy) / raise per-chip batch",
@@ -38,27 +38,22 @@ def table(rows, n_chips: int) -> str:
         "|---|---|---|---|---|---|---|---|---|",
     ]
     for r in rows:
-        tag = f"{r['arch']} / {r['shape']}"
-        if r.get("variant"):
-            tag += f" [{r['variant']}]"
-        if r["status"] == "skipped":
-            out.append(f"| {tag} | — | — | — | — | — | — | — | SKIP: {r['reason'][:70]} |")
+        s = dryrun_summary(r)  # shared derivation (benchmarks/bench_roofline)
+        tag = s["tag"]
+        if s["status"] == "skipped":
+            out.append(f"| {tag} | — | — | — | — | — | — | — | SKIP: {s['reason'][:70]} |")
             continue
-        if r["status"] != "ok":
+        if s["status"] != "ok":
             out.append(f"| {tag} | ERROR | | | | | | | |")
             continue
-        rl = r["roofline"]
-        t_dom = max(rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"])
-        mf = r.get("model_flops", 0.0)
-        frac = mf / (n_chips * PEAK_FLOPS * t_dom) if t_dom > 0 else 0.0
-        useful = mf / max(rl["hlo_flops_global"], 1)
-        kind = r.get("kind", "train")
-        note = IMPROVE.get((rl["dominant"], kind), "")
+        t_dom = s["t_dominant_s"]
+        frac = s["model_flops"] / (n_chips * PEAK_FLOPS * t_dom) if t_dom > 0 else 0.0
+        note = IMPROVE.get((s["dominant"], s["kind"]), "")
         out.append(
-            f"| {tag} | {rl['dominant']} | {rl['t_compute_s']:.4f} | "
-            f"{rl['t_memory_s']:.4f} | {rl['t_collective_s']:.4f} | "
-            f"{frac:.3f} | {useful:.2f} | "
-            f"{r['memory'].get('temp_size_in_bytes', 0)/1e9:.1f} | {note} |"
+            f"| {tag} | {s['dominant']} | {s['t_compute_s']:.4f} | "
+            f"{s['t_memory_s']:.4f} | {s['t_collective_s']:.4f} | "
+            f"{frac:.3f} | {s['useful_flops']:.2f} | "
+            f"{s['temp_gb']:.1f} | {note} |"
         )
     return "\n".join(out)
 

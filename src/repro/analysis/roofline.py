@@ -185,6 +185,190 @@ def hbm_traffic(memory: dict) -> float:
     )
 
 
+def dryrun_summary(record: dict) -> dict:
+    """Derived fields of one dry-run artifact for table emission — the ONE
+    home of this derivation, shared by benchmarks/bench_roofline (CSV rows)
+    and analysis/report (markdown), so the two tables cannot drift.
+    """
+    tag = f"{record['arch']} / {record['shape']}"
+    if record.get("variant"):
+        tag += f" [{record['variant']}]"
+    out = {"tag": tag, "status": record["status"]}
+    if record["status"] != "ok":
+        out["reason"] = record.get("reason", "")
+        return out
+    rl = record["roofline"]
+    mf = record.get("model_flops", 0.0)
+    out.update(
+        dominant=rl["dominant"],
+        t_compute_s=rl["t_compute_s"],
+        t_memory_s=rl["t_memory_s"],
+        t_collective_s=rl["t_collective_s"],
+        t_dominant_s=max(
+            rl["t_compute_s"], rl["t_memory_s"], rl["t_collective_s"]
+        ),
+        useful_flops=mf / max(rl["hlo_flops_global"], 1),
+        temp_gb=record["memory"].get("temp_size_in_bytes", 0) / 1e9,
+        model_flops=mf,
+        kind=record.get("kind", "train"),
+    )
+    return out
+
+
+# --------------------------------------------------------------------------
+# Measured-kernel roofline: achieved bytes/s and flops/s of the *timed*
+# scheduler kernels against a peak model. On TPU the peaks are the chip
+# datasheet constants above; on a host backend they are CALIBRATED once per
+# process — a large memcpy for bandwidth, a large f32 matmul for flops — so
+# "fraction of peak" means fraction of what this machine demonstrably
+# sustains, not of a TPU it is not. benchmarks/bench_kernels.py emits these
+# records into BENCH_kernels.json and the CI kernel-gate compares the
+# normalized fractions, which is what makes the gate machine-portable.
+# --------------------------------------------------------------------------
+
+_kernel_peaks_cache: Optional[dict] = None
+
+
+def _calibrate_host_peaks() -> dict:
+    """Measured single-process peaks: copy bandwidth (read + write bytes
+    over wall time, best of 3) and f32 matmul flops/s (best of 3)."""
+    import time as _time
+
+    import numpy as np
+
+    n = 1 << 24  # 64 MiB f32 source
+    src = np.ones(n, np.float32)
+    bw = 0.0
+    for _ in range(3):
+        t0 = _time.perf_counter()
+        dst = src.copy()
+        dt = _time.perf_counter() - t0
+        bw = max(bw, 2.0 * 4.0 * n / dt)
+    del dst
+    m = 1024
+    a = np.ones((m, m), np.float32)
+    fl = 0.0
+    for _ in range(3):
+        t0 = _time.perf_counter()
+        a @ a
+        dt = _time.perf_counter() - t0
+        fl = max(fl, 2.0 * m**3 / dt)
+    return {"peak_bytes_s": bw, "peak_flops_s": fl, "calibrated": True}
+
+
+def kernel_peaks(platform: Optional[str] = None) -> dict:
+    """Peak model for the measured-kernel roofline, cached per process.
+
+    TPU: datasheet constants (PEAK_FLOPS, HBM_BW). Anything else:
+    host-calibrated measured peaks (see module comment).
+    """
+    global _kernel_peaks_cache
+    if platform == "tpu":
+        return {
+            "peak_bytes_s": HBM_BW, "peak_flops_s": PEAK_FLOPS,
+            "calibrated": False,
+        }
+    if _kernel_peaks_cache is None:
+        _kernel_peaks_cache = _calibrate_host_peaks()
+    return _kernel_peaks_cache
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def kernel_cost_model(
+    kernel: str, n: int, l: int, method: str = "sortscan", iters: int = 20
+) -> dict:
+    """Analytic useful-work model {bytes, flops} for one kernel call on
+    (n rows, l lanes), padded the way the kernels pad (lanes to 128).
+
+    Bytes count each f32 operand read once and the output written once —
+    the fused kernels are single-pass by construction, so this is the
+    traffic a perfect memory system would move. Flops follow the method:
+    bisect evaluates g per halving (~4 flops/lane/iter); sortscan runs its
+    bitonic/scan work as (P, P) matmuls with P = next_pow2(2 * lanes),
+    counted at 2 flops/MAC; "rows" models the off-TPU jnp packed-rows path
+    (one real sort over the 2L breakpoints + prefix-sum sweep — no
+    permutation matmuls), so off-TPU measurements are compared against the
+    work that implementation actually does, not the Pallas substitute.
+    """
+    lp = max(128, -(-l // 128) * 128)
+    if kernel == "proj":
+        # in: z, a, mask + per-row c; out: the projection
+        nbytes = 4 * n * lp * 4 + n * 4
+        grad_flops = 0.0
+    elif kernel == "oga_step":
+        # in: y, a, mask, x, kstar + the 128-lane scal block; out: y(t+1)
+        nbytes = 6 * n * lp * 4 + n * 128 * 4
+        grad_flops = 15.0 * n * lp  # eq. 30 gradient + ascent arithmetic
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}")
+    if method == "sortscan":
+        p = _next_pow2(2 * lp)
+        lg = p.bit_length() - 1
+        stages = lg * (lg + 1) // 2
+        proj_flops = n * (
+            stages * 2 * 2 * p * p   # bitonic: 2 (P, P) matmuls per stage
+            + 3 * 2 * p * p          # prefix sums + shift matmuls
+            + 2 * 2 * lp * p         # breakpoint scatter matmuls
+            + 30.0 * lp              # closed-form segment finish
+        )
+    elif method == "rows":
+        lg = (2 * lp - 1).bit_length()
+        # sort compare-exchanges + prefix-sum sweep + segment finish
+        proj_flops = n * lp * (4.0 * lg + 40.0)
+    else:
+        proj_flops = n * lp * (4.0 * iters + 20.0)
+    return {"bytes": float(nbytes), "flops": float(grad_flops + proj_flops)}
+
+
+def kernel_roofline(
+    kernel: str,
+    n: int,
+    l: int,
+    us: float,
+    *,
+    method: str = "sortscan",
+    iters: int = 20,
+    platform: Optional[str] = None,
+    peaks: Optional[dict] = None,
+) -> dict:
+    """Measured achieved-vs-peak record for one timed kernel call.
+
+    ``us`` is the measured wall time per call. Returns achieved bytes/s
+    and flops/s from the analytic cost model, their fractions of the peak
+    model, and which roof binds (the larger fraction — for these memory-
+    bound kernels that is virtually always bytes).
+    """
+    cost = kernel_cost_model(kernel, n, l, method=method, iters=iters)
+    pk = peaks or kernel_peaks(platform)
+    t = max(us, 1e-9) * 1e-6
+    achieved_b = cost["bytes"] / t
+    achieved_f = cost["flops"] / t
+    frac_b = achieved_b / pk["peak_bytes_s"]
+    frac_f = achieved_f / pk["peak_flops_s"]
+    return {
+        "kernel": kernel,
+        "shape": f"N{n}xL{l}",
+        "method": method,
+        "us": float(us),
+        "model_bytes": cost["bytes"],
+        "model_flops": cost["flops"],
+        "achieved_bytes_s": achieved_b,
+        "achieved_flops_s": achieved_f,
+        "peak_bytes_s": pk["peak_bytes_s"],
+        "peak_flops_s": pk["peak_flops_s"],
+        "frac_peak_bytes": frac_b,
+        "frac_peak_flops": frac_f,
+        "dominant": "memory" if frac_b >= frac_f else "compute",
+        "peaks_calibrated": bool(pk.get("calibrated", False)),
+    }
+
+
 def roofline(record: dict, n_devices: int) -> dict:
     """record: one dry-run artifact (per-device flops/bytes + collectives)."""
     flops_g = record["cost"].get("flops", 0.0) * n_devices

@@ -1,3 +1,7 @@
 """Checkpointing substrate: atomic sharded save/restore + manager."""
-from repro.ckpt.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.ckpt.checkpoint import (  # noqa: F401
+    atomic_write_json,
+    load_checkpoint,
+    save_checkpoint,
+)
 from repro.ckpt.manager import CheckpointManager  # noqa: F401

@@ -52,6 +52,23 @@ def _publish(tmp: str, final: str, directory: str) -> None:
     _fsync_dir(directory)
 
 
+def atomic_write_json(path: str, obj: Any) -> None:
+    """Durably publish ``obj`` as JSON at ``path`` via the checkpoint write
+    protocol: serialize to a same-directory temp file, fsync, ``os.replace``
+    into place, fsync the directory. Readers therefore only ever observe a
+    complete document or the previous one — never a torn write. The
+    kernel-autotune config table (kernels.autotune) publishes through this.
+    """
+    directory = os.path.dirname(path) or "."
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f".tmp.{os.path.basename(path)}")
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    _publish(tmp, path, directory)
+
+
 def save_checkpoint(
     path: str, tree: Any, step: int, extra: Optional[dict] = None
 ) -> str:

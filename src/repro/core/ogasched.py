@@ -94,13 +94,14 @@ def run(
     return rewards, final.y
 
 
-@partial(jax.jit, static_argnames=("use_pallas",))
+@partial(jax.jit, static_argnames=("use_pallas", "tiling"))
 def run_batch(
     spec: ClusterSpec,
     arrivals: jax.Array,
     eta0: jax.Array,
     decay: jax.Array,
     use_pallas: bool | None = None,
+    tiling=None,
 ):
     """Run OGASCHED over a stacked grid of G configurations, grid-flattened.
 
@@ -115,6 +116,10 @@ def run_batch(
       spec: stacked ClusterSpec (every leaf leading (G,)).
       arrivals: (G, T, L); eta0, decay: (G,) (traced, so hyperparameter
         axes sweep).
+      tiling: optional static ``kernels.autotune.KernelConfig`` pinning the
+        Pallas tiling for every step's fused call (hashable NamedTuple, so
+        it rides as a jit static); default resolves from the autotune
+        cache on the packed shape.
     Returns:
       rewards: (G, T) per-slot rewards; y_final: (G, L, R, K).
     """
@@ -131,7 +136,8 @@ def run_batch(
         y, eta = carry
         q_t = jax.vmap(reward.total_reward)(spec, x_t, y)
         y_next = ops.oga_update_batch(
-            spec, y, x_t, eta, operands=operands, use_pallas=use_pallas
+            spec, y, x_t, eta, operands=operands, use_pallas=use_pallas,
+            tiling=tiling,
         )
         return (y_next, eta * decay), q_t
 

@@ -14,8 +14,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-DEFAULT_BQ = 128
-DEFAULT_BK = 128
+from repro.kernels import autotune
+
+DEFAULT_BQ = autotune.FLASH_BLOCK_Q
+DEFAULT_BK = autotune.FLASH_BLOCK_K
 NEG = -1e30
 
 

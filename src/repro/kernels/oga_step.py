@@ -1,6 +1,6 @@
 """Pallas TPU kernel: fused OGA slot update (beyond-paper optimisation).
 
-Fuses reward gradient (eq. 30) + ascent + fast projection for a tile of
+Fuses reward gradient (eq. 30) + ascent + projection for a tile of
 (r, k) cells in one VMEM pass: y is read once and y(t+1) written once,
 instead of three HBM round-trips (grad kernel, axpy, projection). The OGA
 update is memory-bound (O(1) flops/byte), so fusion is the dominant lever —
@@ -10,10 +10,13 @@ Row layout: row n = cell (r, k) with L lanes (ports). Per-row scalars are
 packed as the columns of ``scal`` — ``SCAL_COLUMNS`` below is the single
 definition of that layout (kernels.ops builds it, kernels.ref unpacks it).
 
-The projection uses the seeded-bracket bisection + secant finish shared
-with kernels.proj_bisect (the exact sorted sweep in core.projection needs a
-per-row sort that has no efficient in-kernel lowering; off-TPU the fused
-backend runs the sorted sweep via kernels.ref.oga_step_ref instead).
+The projection is selected statically per call: ``method="sortscan"``
+(default) runs the exact in-kernel breakpoint sweep
+(kernels.sortscan._sortscan_water_level — same closed-form solve as the
+off-TPU production path, so the fused step is exact on-device), while
+``method="bisect"`` keeps the seeded-bracket bisection + secant finish
+shared with kernels.proj_bisect as the A/B baseline. Tiling (``row_block``)
+and the bisect iteration count come from kernels.autotune.
 """
 from __future__ import annotations
 
@@ -23,14 +26,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.proj_bisect import ROW_BLOCK, _water_level
+from repro.kernels import autotune
+from repro.kernels.proj_bisect import _water_level
+from repro.kernels.sortscan import _sortscan_water_level
 
 # The packed-scalar operand layout, column by column. scal[:, i] holds
 # SCAL_COLUMNS[i]; columns past NUM_SCAL are zero padding up to the TPU lane
-# width of 128 (asserted in oga_step_fused).
+# width (asserted in oga_step_fused).
 SCAL_COLUMNS = ("alpha", "beta", "c", "kind", "eta")
 NUM_SCAL = len(SCAL_COLUMNS)
-_SCAL_LANES = 128
+_SCAL_LANES = autotune.SCAL_LANES
 
 
 def pack_scal_static(alpha, beta, c, kind) -> jax.Array:
@@ -66,13 +71,16 @@ def _util_grad(kind, alpha, y):
     return jnp.where(kind == 3, g_pol, g)
 
 
-def _kernel(y_ref, a_ref, mask_ref, x_ref, kstar_ref, scal_ref, out_ref):
+def _kernel(
+    y_ref, a_ref, mask_ref, x_ref, kstar_ref, scal_ref, out_ref,
+    *, method: str, iters: int
+):
     y = y_ref[...].astype(jnp.float32)          # (Rb, L)
     a = a_ref[...].astype(jnp.float32)
     m = mask_ref[...].astype(jnp.float32)
     x = x_ref[...].astype(jnp.float32)          # (Rb, L) arrivals (bcast rows)
     kst = kstar_ref[...].astype(jnp.float32)    # (Rb, L) 1{k = k*_l}
-    scal = scal_ref[...].astype(jnp.float32)    # (Rb, 128): SCAL_COLUMNS
+    scal = scal_ref[...].astype(jnp.float32)    # (Rb, lanes): SCAL_COLUMNS
     alpha = scal[:, 0:1]
     beta = scal[:, 1:2]
     c = scal[:, 2:3]
@@ -83,41 +91,58 @@ def _kernel(y_ref, a_ref, mask_ref, x_ref, kstar_ref, scal_ref, out_ref):
     g = _util_grad(kind, alpha, y * m) - beta * kst
     z = y + eta * x * g * m
 
-    # fast projection: seeded-bracket bisection + secant (proj_bisect)
-    tau, need = _water_level(z, a, m, c)
+    # projection: exact sortscan sweep by default; seeded bisect for A/B
+    if method == "sortscan":
+        tau, need = _sortscan_water_level(z, a, m, c)
+    else:
+        tau, need = _water_level(z, a, m, c, iters=iters)
     box = jnp.clip(z, 0.0, a) * m
     proj = jnp.clip(z - tau, 0.0, a) * m
     out_ref[...] = jnp.where(need, proj, box).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def oga_step_fused(y, a, mask, x, kstar, scal, *, interpret: bool = False):
+@functools.partial(
+    jax.jit, static_argnames=("method", "row_block", "iters", "interpret")
+)
+def oga_step_fused(
+    y, a, mask, x, kstar, scal, *,
+    method: str = None, row_block=None, iters=None, interpret: bool = False,
+):
     """Fused OGA slot update over (N, L) rows — N is R*K for one config, or
     G*R*K when a sweep chunk's grid axis is flattened in (kernels.ops.
     oga_update_batch issues exactly one such call per step for a whole
     chunk).
 
     y, a, mask, x, kstar: (N, L). scal: (N, NUM_SCAL) per ``SCAL_COLUMNS``.
+    method/row_block/iters are the autotuned knobs (kernels.autotune
+    defaults when None; ``iters`` applies to method="bisect" only).
     Returns y(t+1) (N, L).
     """
+    meth = method or autotune.DEFAULT_PROJ_METHOD
+    if meth not in autotune.PROJ_METHODS:
+        raise ValueError(
+            f"method must be in {autotune.PROJ_METHODS}, got {meth!r}"
+        )
+    rb = row_block or autotune.DEFAULT_ROW_BLOCK
+    it = iters or autotune.DEFAULT_BISECT_ITERS
     if scal.shape[1] > _SCAL_LANES:
         raise ValueError(
             f"scal has {scal.shape[1]} columns; the kernel packs them into "
             f"one {_SCAL_LANES}-lane block (layout {SCAL_COLUMNS})"
         )
     N, L = y.shape
-    pad_n = (-N) % ROW_BLOCK
-    pad_l = (-L) % 128
+    pad_n = (-N) % rb
+    pad_l = (-L) % autotune.LANE_FLOOR
     pad2 = lambda t: jnp.pad(t, ((0, pad_n), (0, pad_l)))
     yp, ap, mp, xp, kp = map(pad2, (y, a, mask, x, kstar))
     sp = jnp.pad(scal, ((0, pad_n), (0, _SCAL_LANES - scal.shape[1])))
     Np, Lp = yp.shape
-    row_spec = pl.BlockSpec((ROW_BLOCK, Lp), lambda i: (i, 0))
+    row_spec = pl.BlockSpec((rb, Lp), lambda i: (i, 0))
     out = pl.pallas_call(
-        _kernel,
-        grid=(Np // ROW_BLOCK,),
+        functools.partial(_kernel, method=meth, iters=it),
+        grid=(Np // rb,),
         in_specs=[row_spec] * 5
-        + [pl.BlockSpec((ROW_BLOCK, _SCAL_LANES), lambda i: (i, 0))],
+        + [pl.BlockSpec((rb, _SCAL_LANES), lambda i: (i, 0))],
         out_specs=row_spec,
         out_shape=jax.ShapeDtypeStruct((Np, Lp), y.dtype),
         interpret=interpret,

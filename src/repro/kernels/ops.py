@@ -12,21 +12,33 @@ is exact. The packed-scalar column layout is defined once, in
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import projection as _projection
 from repro.core import reward as _reward
+from repro.kernels import autotune as _at
 from repro.kernels import flash_attention as _fa
 from repro.kernels import oga_step as _og
 from repro.kernels import proj_bisect as _pb
 from repro.kernels import ref as _ref
+from repro.kernels import sortscan as _ss
 
 OGA_BACKENDS = ("auto", "fused", "reference")
 
 
+@functools.lru_cache(maxsize=1)
+def _platform() -> str:
+    """The default backend platform, resolved ONCE per process — dispatch
+    runs per kernel call, and querying the device registry each time is
+    measurable overhead on the hot path."""
+    return jax.default_backend()
+
+
 def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    return _platform() == "tpu"
 
 
 def resolve_oga_backend(backend: str = "auto") -> str:
@@ -38,6 +50,20 @@ def resolve_oga_backend(backend: str = "auto") -> str:
     if backend == "auto":
         return "fused"
     return backend
+
+
+def backend_provenance(backend: str = "auto") -> dict:
+    """What actually runs for ``backend`` on this process — recorded into
+    BENCH_kernels.json rows so "auto" results are unambiguous about the
+    path measured."""
+    resolved = resolve_oga_backend(backend)
+    fused_impl = "pallas" if _on_tpu() else "jnp-rows"
+    return {
+        "backend_requested": backend,
+        "backend_resolved": resolved,
+        "platform": _platform(),
+        "fused_impl": fused_impl if resolved == "fused" else "spec-level",
+    }
 
 
 # ------------------------------------------------------------- row layout --
@@ -92,14 +118,31 @@ def _kstar_rows(spec, y):
 
 
 def _dispatch_fused(y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal,
-                    use_pallas):
+                    use_pallas, tiling=None):
     """Pallas on TPU, packed-row jnp (exact sorted projection) elsewhere.
     ``use_pallas`` forces: True -> Pallas (interpret mode off-TPU, slow —
-    kernel correctness checks only), False -> jnp rows."""
+    kernel correctness checks only), False -> jnp rows.
+
+    ``tiling`` (an ``autotune.KernelConfig``) pins the Pallas tiling; when
+    None it resolves from the autotune cache on the static packed shape —
+    winner if warmed, ``autotune.DEFAULT_CONFIG`` (the PR 4 hand-picked
+    tiling) on a miss. Production dispatch is value-deterministic: only
+    the exact sortscan method runs here regardless of what the cache
+    holds (a bisect entry contributes its row_block only — bisect output
+    depends on its iteration count, and cache state must never change
+    values, only speed). Explicit bisect A/B goes through
+    ``ops.oga_step_fused(tiling=...)``.
+    """
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
+        cfg = tiling
+        if cfg is None:
+            cfg = _at.resolve("oga_step", *y_rows.shape)
+        if cfg.method != "sortscan":
+            cfg = cfg._replace(method="sortscan")
         return _og.oga_step_fused(
             y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal,
+            method=cfg.method, row_block=cfg.row_block, iters=cfg.iters or None,
             interpret=not _on_tpu(),
         )
     return _ref.oga_step_ref(y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal)
@@ -114,6 +157,7 @@ def oga_update_spec(
     backend: str = "auto",
     operands=None,
     use_pallas: bool | None = None,
+    tiling=None,
 ) -> jax.Array:
     """One OGA slot update y -> y(t+1) at the (L, R, K) spec level.
 
@@ -131,7 +175,8 @@ def oga_update_spec(
     ``operands`` optionally carries ``pack_spec_operands(spec)`` so a scan
     body does not rebuild the static rows every step. ``use_pallas`` forces
     the fused dispatch (True: Pallas even off-TPU in interpret mode; False:
-    jnp rows even on TPU); default picks by platform.
+    jnp rows even on TPU); default picks by platform. ``tiling`` pins the
+    Pallas tiling (``autotune.KernelConfig``; default: autotune cache).
     """
     backend = resolve_oga_backend(backend)
     if backend == "reference":
@@ -147,7 +192,8 @@ def oga_update_spec(
     x_rows = jnp.broadcast_to(x.astype(y.dtype)[None], (R * K, L))
     scal = _og.with_eta(scal_static, eta)
     rows = _dispatch_fused(
-        y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal, use_pallas
+        y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal, use_pallas,
+        tiling=tiling,
     )
     return unpack_rows(rows, L, R, K)
 
@@ -160,6 +206,7 @@ def oga_update_batch(
     *,
     operands=None,
     use_pallas: bool | None = None,
+    tiling=None,
 ) -> jax.Array:
     """One fused OGA slot update for a whole stacked grid of G configs.
 
@@ -173,6 +220,8 @@ def oga_update_batch(
       spec: stacked ClusterSpec, every leaf leading (G,).
       y: (G, L, R, K) decisions; x: (G, L) arrivals; eta: (G,) step sizes.
       operands: optional ``pack_spec_operands_batch(spec)``.
+      tiling: optional ``autotune.KernelConfig`` pinning the Pallas tiling
+        (default: resolve from the autotune cache on the packed shape).
     Returns y(t+1) (G, L, R, K).
     """
     G, L, R, K = y.shape
@@ -190,7 +239,8 @@ def oga_update_batch(
     ).reshape(G * N)
     scal = _og.with_eta(scal_static, eta_rows)
     rows = _dispatch_fused(
-        y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal, use_pallas
+        y_rows, a_rows, mask_rows, x_rows, kstar_rows, scal, use_pallas,
+        tiling=tiling,
     )
     return jax.vmap(unpack_rows, in_axes=(0, None, None, None))(
         rows.reshape(G, N, L), L, R, K
@@ -198,17 +248,52 @@ def oga_update_batch(
 
 
 # ------------------------------------------------------- kernel dispatchers --
-def proj_bisect(z, a, mask, c, *, use_pallas: bool | None = None):
+def proj_bisect(z, a, mask, c, *, use_pallas: bool | None = None, tiling=None):
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
-        return _pb.proj_bisect(z, a, mask, c, interpret=not _on_tpu())
+        if tiling is not None:
+            cfg = tiling
+        else:
+            # cache entries contribute execution layout only — iteration
+            # count stays at the kernel default unless pinned explicitly,
+            # so cache state can never change values, only speed
+            cfg = _at.resolve("proj", *z.shape)._replace(iters=0)
+        return _pb.proj_bisect(
+            z, a, mask, c, row_block=cfg.row_block,
+            iters=cfg.iters or None, interpret=not _on_tpu(),
+        )
     return _ref.proj_rows_ref(z, a, mask, c)
 
 
-def oga_step_fused(y, a, mask, x, kstar, scal, *, use_pallas: bool | None = None):
+def proj_sortscan(z, a, mask, c, *, use_pallas: bool | None = None, tiling=None):
+    """Exact in-kernel sortscan projection: Pallas on TPU (interpret mode
+    when forced off-TPU), the jnp sortscan sweep otherwise."""
     use = _on_tpu() if use_pallas is None else use_pallas
     if use:
-        return _og.oga_step_fused(y, a, mask, x, kstar, scal, interpret=not _on_tpu())
+        cfg = tiling if tiling is not None else _at.resolve("proj", *z.shape)
+        return _ss.proj_sortscan(
+            z, a, mask, c, row_block=cfg.row_block, interpret=not _on_tpu()
+        )
+    return _projection.project_rows_sortscan(z, a, mask, c)
+
+
+def oga_step_fused(y, a, mask, x, kstar, scal, *,
+                   use_pallas: bool | None = None, tiling=None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        if tiling is not None:
+            cfg = tiling  # explicit pin: the bisect A/B entry point
+        else:
+            # cache-resolved configs contribute row_block only; production
+            # dispatch always runs the exact sortscan (see _dispatch_fused)
+            cfg = _at.resolve("oga_step", *y.shape)._replace(
+                method="sortscan", iters=0
+            )
+        return _og.oga_step_fused(
+            y, a, mask, x, kstar, scal, method=cfg.method,
+            row_block=cfg.row_block, iters=cfg.iters or None,
+            interpret=not _on_tpu(),
+        )
     return _ref.oga_step_ref(y, a, mask, x, kstar, scal)
 
 

@@ -4,22 +4,24 @@ One grid row-block projects a tile of (r, k) cells; each cell's row holds its
 L_r channel entries. The paper's sort + data-dependent repeat loop is
 replaced by branch-free bisection on the water level tau (DESIGN.md §3):
 pure VPU arithmetic per lane — no sorting network, no data-dependent trip
-counts, identical control flow for every cell. This is the TPU fallback for
-the exact sorted breakpoint sweep (core.projection.project_rows_sorted),
-whose per-row 2L-element sort has no efficient in-kernel lowering.
+counts, identical control flow for every cell. Since the sortscan sweep
+landed in-kernel (kernels.sortscan) this bisection is no longer the fused
+default — it stays behind ``method="bisect"`` as the A/B baseline and as
+the low-VMEM fallback shape the autotuner may still pick.
 
 The bracket is seeded rather than started at [0, max z]: g is 1-Lipschitz
-per active lane, so tau* >= (sum(box) - c) / n_active, and ITERS drops from
-64 to 20. A final secant step closes most of the remaining gap: g is
-piecewise linear, so the chord from (lo, g(lo)) to (hi, g(hi)) crosses c
-exactly at tau* once the bracket is breakpoint-free (the common case after
-20 halvings). When a kink remains inside the bracket the chord can land on
-either side of tau* — g is NOT convex (each clip term has slope 0 -> -1 ->
-0, a concave kink at z_l - a_l) — so the hard accuracy/feasibility
-guarantee is the bracket width itself: |tau - tau*| <= (hi0 - lo0) / 2^20,
-i.e. capacity overshoot at most n_active * that (f32-rounding magnitude at
-the scales this scheduler runs; pinned vs the exact oracle in
-tests/test_kernels.py).
+per active lane, so tau* >= (sum(box) - c) / n_active, and the default
+iteration count drops from 64 to ``autotune.DEFAULT_BISECT_ITERS``. A
+final secant step closes most of the remaining gap: g is piecewise linear,
+so the chord from (lo, g(lo)) to (hi, g(hi)) crosses c exactly at tau*
+once the bracket is breakpoint-free (the common case after the halvings).
+When a kink remains inside the bracket the chord can land on either side
+of tau* — g is NOT convex (each clip term has slope 0 -> -1 -> 0, a
+concave kink at z_l - a_l) — so the hard accuracy/feasibility guarantee is
+the bracket width itself: |tau - tau*| <= (hi0 - lo0) / 2^iters, i.e.
+capacity overshoot at most n_active * that (f32-rounding magnitude at the
+scales this scheduler runs; pinned vs the exact oracle in
+tests/test_kernels.py). ``iters`` is an autotuned knob (autotune.BISECT_ITERS).
 """
 from __future__ import annotations
 
@@ -29,13 +31,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-ROW_BLOCK = 8
-ITERS = 20
+from repro.kernels import autotune
+
+# Back-compat aliases: the numbers themselves live in kernels.autotune (the
+# hardcoded-tiling lint rule keeps them there).
+ROW_BLOCK = autotune.DEFAULT_ROW_BLOCK
+ITERS = autotune.DEFAULT_BISECT_ITERS
 NEG = -1e30
 
 
-def _water_level(z, a, m, c):
-    """Shared bisection body: seeded bracket, ITERS halvings, secant finish.
+def _water_level(z, a, m, c, iters: int = ITERS):
+    """Shared bisection body: seeded bracket, ``iters`` halvings, secant
+    finish.
 
     z, a, m: (Rb, L) f32; c: (Rb, 1) f32. Returns (tau, need) with tau the
     water level on `need` rows (capacity binding) and 0 elsewhere.
@@ -57,50 +64,58 @@ def _water_level(z, a, m, c):
         too_big = g(mid) > c
         return jnp.where(too_big, mid, lo), jnp.where(too_big, hi, mid)
 
-    lo, hi = jax.lax.fori_loop(0, ITERS, body, (lo, hi))
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
     glo, ghi = g(lo), g(hi)
     tau = lo + (glo - c) * (hi - lo) / jnp.maximum(glo - ghi, 1e-30)
     tau = jnp.clip(tau, lo, hi)
     return jnp.where(need, tau, 0.0), need
 
 
-def _kernel(z_ref, a_ref, mask_ref, c_ref, out_ref):
+def _kernel(z_ref, a_ref, mask_ref, c_ref, out_ref, *, iters: int):
     z = z_ref[...].astype(jnp.float32)          # (Rb, L)
     a = a_ref[...].astype(jnp.float32)
     m = mask_ref[...].astype(jnp.float32)
     c = c_ref[...].astype(jnp.float32)[:, :1]   # (Rb, 1)
 
-    tau, need = _water_level(z, a, m, c)
+    tau, need = _water_level(z, a, m, c, iters=iters)
     box = jnp.clip(z, 0.0, a) * m
     proj = jnp.clip(z - tau, 0.0, a) * m
     out_ref[...] = jnp.where(need, proj, box).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def proj_bisect(z, a, mask, c, *, interpret: bool = False):
+@functools.partial(
+    jax.jit, static_argnames=("row_block", "iters", "interpret")
+)
+def proj_bisect(
+    z, a, mask, c, *, row_block=None, iters=None, interpret: bool = False
+):
     """Project rows of z (N, L) onto {0 <= y <= a, sum(y * mask) <= c}.
 
     a, mask: (N, L); c: (N,). Rows are independent — the paper's per-(r,k)
-    parallelism maps to the Pallas grid.
+    parallelism maps to the Pallas grid. ``row_block``/``iters`` are the
+    autotuned knobs (kernels.autotune defaults when None).
     """
+    rb = row_block or autotune.DEFAULT_ROW_BLOCK
+    it = iters or autotune.DEFAULT_BISECT_ITERS
+    lanes = autotune.LANE_FLOOR
     N, L = z.shape
-    pad_n = (-N) % ROW_BLOCK
-    pad_l = (-L) % 128  # TPU lane alignment
+    pad_n = (-N) % rb
+    pad_l = (-L) % lanes  # TPU lane alignment
     zp = jnp.pad(z, ((0, pad_n), (0, pad_l)))
     ap = jnp.pad(a, ((0, pad_n), (0, pad_l)))
     mp = jnp.pad(mask, ((0, pad_n), (0, pad_l)))
-    cp = jnp.pad(c, (0, pad_n))[:, None] * jnp.ones((1, 128), z.dtype)
+    cp = jnp.pad(c, (0, pad_n))[:, None] * jnp.ones((1, lanes), z.dtype)
     Np, Lp = zp.shape
-    grid = (Np // ROW_BLOCK,)
-    row_spec = pl.BlockSpec((ROW_BLOCK, Lp), lambda i: (i, 0))
+    grid = (Np // rb,)
+    row_spec = pl.BlockSpec((rb, Lp), lambda i: (i, 0))
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, iters=it),
         grid=grid,
         in_specs=[
             row_spec,
             row_spec,
             row_spec,
-            pl.BlockSpec((ROW_BLOCK, 128), lambda i: (i, 0)),
+            pl.BlockSpec((rb, lanes), lambda i: (i, 0)),
         ],
         out_specs=row_spec,
         out_shape=jax.ShapeDtypeStruct((Np, Lp), z.dtype),

@@ -1,0 +1,203 @@
+"""Pallas TPU kernel: exact in-kernel sortscan water-level projection.
+
+This ports the PR 5 breakpoint-sweep projection
+(``core.projection.project_rows_sortscan``) into the kernel so the fused
+OGA step is exact on-device: g(tau) = sum_l m_l clip(z_l - tau, 0, a_l) is
+piecewise linear with breakpoints {z_l - a_l, z_l}; sort them ascending
+with their slope deltas (+m at z-a, -m at z), prefix-sum the deltas to the
+per-segment active-lane count, walk g down segment by segment, pick the
+last breakpoint ``lo`` with g(lo) >= c, and solve the bracketing segment
+in closed form. As in the reference, the scan only ever SELECTS the
+segment — g(lo) and the slope are recomputed directly in one O(L) pass
+(``core.projection._finish_water_level``'s tail, inlined here), so scan
+rounding cannot leak into the result beyond segment-tie jitter.
+
+Mosaic has no sort/gather/concatenate lowering, so everything data-movey
+is expressed as matmuls against constant 0/1 matrices built from 2-D
+iotas (TPU requires >= 2-D iota; see /opt/skills/guides):
+
+* scatter: breakpoints land in a power-of-two lane span P via two (L, P)
+  one-hot placement matrices; pad slots get v = NEG so they sort to the
+  FRONT, where their zero deltas keep every prefix sum honest.
+* sort: a bitonic network; each compare-exchange fetches the XOR-partner
+  lane through a (P, P) permutation matmul, and value + payload move as a
+  pair, so no index gather ever materialises.
+* scan: inclusive prefix sums are one triangular (P, P) matmul; the
+  shift-by-one for segment widths is its superdiagonal cousin.
+
+All of it is MXU work on TPU and plain XLA under ``interpret=True`` (how
+CI exercises it off-TPU). The bisect fallback (kernels.proj_bisect) stays
+available as ``method="bisect"`` for A/B; this kernel is the default
+(``autotune.DEFAULT_PROJ_METHOD``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import autotune
+
+NEG = -1e30
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _dot(x, mat):
+    return jax.lax.dot(x, mat, preferred_element_type=jnp.float32)
+
+
+def _partner_mat(p: int, j: int):
+    """(P, P) permutation M with ``x @ M`` giving lane i the value of lane
+    i ^ j. The XOR is spelled arithmetically (j is a power of two, so
+    a ^ j = a + j - 2 * (bit j of a)) — Mosaic-safe integer vector ops."""
+    a = jax.lax.broadcasted_iota(jnp.int32, (p, p), 0)
+    b = jax.lax.broadcasted_iota(jnp.int32, (p, p), 1)
+    partner = a + j * (1 - 2 * ((a // j) % 2))
+    return (partner == b).astype(jnp.float32)
+
+
+def _tri_mat(p: int):
+    """(P, P) inclusive-cumsum matrix: (x @ T)_j = sum_{i <= j} x_i."""
+    a = jax.lax.broadcasted_iota(jnp.int32, (p, p), 0)
+    b = jax.lax.broadcasted_iota(jnp.int32, (p, p), 1)
+    return (a <= b).astype(jnp.float32)
+
+
+def _shift_mat(p: int):
+    """(P, P) shift-by-one: (x @ S)_j = x_{j-1}, with (x @ S)_0 = 0."""
+    a = jax.lax.broadcasted_iota(jnp.int32, (p, p), 0)
+    b = jax.lax.broadcasted_iota(jnp.int32, (p, p), 1)
+    return (a + 1 == b).astype(jnp.float32)
+
+
+def _bitonic_sort_pairs(v, d):
+    """Sort lanes of v ascending, carrying payload d along — (Rb, P) each,
+    P a power of two. Classic bitonic network: block size k doubles, the
+    compare distance j halves within each block; a lane keeps the min of
+    its partner pair iff its block direction is ascending and it is the
+    lower index (or descending and upper). Both sides of a pair compute
+    the same swap decision, so (value, payload) move together and ties
+    leave both lanes untouched."""
+    p = v.shape[-1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, v.shape, 1)
+    k = 2
+    while k <= p:
+        j = k // 2
+        while j >= 1:
+            mat = _partner_mat(p, j)
+            pv = _dot(v, mat)
+            pd = _dot(d, mat)
+            lower = (idx // j) % 2 == 0       # bit j of lane index clear
+            asc = (idx // k) % 2 == 0         # block direction
+            want_min = lower == asc
+            swap = jnp.where(want_min, pv < v, pv > v)
+            v = jnp.where(swap, pv, v)
+            d = jnp.where(swap, pd, d)
+            j //= 2
+        k *= 2
+    return v, d
+
+
+def _sortscan_water_level(z, a, m, c):
+    """Exact water level by in-kernel breakpoint sweep.
+
+    z, a, m: (Rb, L) f32; c: (Rb, 1) f32. Returns (tau, need): tau solves
+    g(tau) = c exactly (to f32 rounding) on ``need`` rows (capacity
+    binding) and is 0 elsewhere. Drop-in for proj_bisect._water_level.
+    """
+    rb, lp = z.shape
+    p = _next_pow2(2 * lp)
+
+    box = jnp.clip(z, 0.0, a) * m
+    s_box = jnp.sum(box, axis=1, keepdims=True)
+    need = s_box > c
+
+    # scatter the 2L breakpoints + slope deltas into P pow2 lanes; the
+    # NEG-filled pad slots sort to the front with delta 0
+    src = jax.lax.broadcasted_iota(jnp.int32, (lp, p), 0)
+    dst = jax.lax.broadcasted_iota(jnp.int32, (lp, p), 1)
+    put_lo = (dst == src).astype(jnp.float32)        # z - a -> slot l
+    put_hi = (dst == src + lp).astype(jnp.float32)   # z     -> slot L + l
+    slot = jax.lax.broadcasted_iota(jnp.int32, (rb, p), 1)
+    pad = (slot >= 2 * lp).astype(jnp.float32)
+    v = _dot(z - a, put_lo) + _dot(z, put_hi) + NEG * pad
+    d = _dot(m, put_lo) - _dot(m, put_hi)
+
+    vs, ds = _bitonic_sort_pairs(v, d)
+
+    # n_seg_j = active lanes on [vs_j, vs_{j+1}); g walks down from the
+    # smallest breakpoint by n_seg_{j-1} * (vs_j - vs_{j-1}) per segment.
+    # Pad slots contribute width ~1e30 but slope exactly 0.
+    tri = _tri_mat(p)
+    shift = _shift_mat(p)
+    n_seg = _dot(ds, tri)
+    drop = _dot(n_seg, shift) * (vs - _dot(vs, shift))
+    v0 = jnp.min(v, axis=1, keepdims=True)
+    g0 = jnp.sum(jnp.clip(z - v0, 0.0, a) * m, axis=1, keepdims=True)
+    gv = g0 - _dot(drop, tri)
+
+    # last breakpoint on/above level c, then the exact closed-form segment
+    # solve with g(lo) and the slope recomputed directly (scan rounding
+    # only ever picks the segment)
+    lo = jnp.max(jnp.where(gv >= c, vs, NEG), axis=1, keepdims=True)
+    glo = jnp.sum(jnp.clip(z - lo, 0.0, a) * m, axis=1, keepdims=True)
+    n = jnp.sum(m * (z - a <= lo) * (z > lo), axis=1, keepdims=True)
+    tau = jnp.where(n > 0.5, lo + (glo - c) / jnp.maximum(n, 1.0), lo)
+    tau = jnp.maximum(tau, 0.0)
+    return jnp.where(need, tau, 0.0), need
+
+
+def _kernel(z_ref, a_ref, mask_ref, c_ref, out_ref):
+    z = z_ref[...].astype(jnp.float32)          # (Rb, L)
+    a = a_ref[...].astype(jnp.float32)
+    m = mask_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)[:, :1]   # (Rb, 1)
+
+    tau, need = _sortscan_water_level(z, a, m, c)
+    box = jnp.clip(z, 0.0, a) * m
+    proj = jnp.clip(z - tau, 0.0, a) * m
+    out_ref[...] = jnp.where(need, proj, box).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block", "interpret"))
+def proj_sortscan(z, a, mask, c, *, row_block=None, interpret: bool = False):
+    """Exact projection of rows of z (N, L) onto {0 <= y <= a,
+    sum(y * mask) <= c} — the sortscan sweep run on-device.
+
+    a, mask: (N, L); c: (N,). ``row_block`` is the autotuned grid tile
+    (``autotune.DEFAULT_ROW_BLOCK`` when None); rows are independent, so
+    the tile only sets the grid shape, never the values.
+    """
+    rb = row_block or autotune.DEFAULT_ROW_BLOCK
+    lanes = autotune.LANE_FLOOR
+    N, L = z.shape
+    pad_n = (-N) % rb
+    pad_l = (-L) % lanes
+    zp = jnp.pad(z, ((0, pad_n), (0, pad_l)))
+    ap = jnp.pad(a, ((0, pad_n), (0, pad_l)))
+    mp = jnp.pad(mask, ((0, pad_n), (0, pad_l)))
+    cp = jnp.pad(c, (0, pad_n))[:, None] * jnp.ones((1, lanes), z.dtype)
+    Np, Lp = zp.shape
+    row_spec = pl.BlockSpec((rb, Lp), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Np // rb,),
+        in_specs=[
+            row_spec,
+            row_spec,
+            row_spec,
+            pl.BlockSpec((rb, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((Np, Lp), z.dtype),
+        interpret=interpret,
+    )(zp, ap, mp, cp)
+    return out[:N, :L]

@@ -275,12 +275,18 @@ def run_algorithm(
 # the per-shard computation is the exact computation the one-device grid runs.
 # --------------------------------------------------------------------------
 
-def _vmap_slot(spec, arrivals, eta0, decay, *, name, backend, works=None):
+def _vmap_slot(spec, arrivals, eta0, decay, *, name, backend, works=None,
+               tiling=None):
     if name == "ogasched":
         if ops.resolve_oga_backend(backend) == "fused":
             # grid-flattened: one fused row-kernel call per step covers the
             # whole chunk (N = G*R*K rows) instead of G vmapped scans.
-            rewards, _ = ogasched.run_batch(spec, arrivals, eta0, decay)
+            # ``tiling`` pins the Pallas tile layout — bitwise-pure on the
+            # sortscan path, so it stays OUT of sweep_fingerprint with the
+            # rest of the execution layout.
+            rewards, _ = ogasched.run_batch(
+                spec, arrivals, eta0, decay, tiling=tiling
+            )
             return rewards
         return jax.vmap(
             lambda s, a, e, d: run_algorithm(
@@ -313,8 +319,11 @@ def _vmap_lifecycle(
     )(spec, arrivals, works, eta0, decay, faults)
 
 
-def _grid_ogasched(spec, arrivals, eta0, decay, backend):
-    return _vmap_slot(spec, arrivals, eta0, decay, name="ogasched", backend=backend)
+def _grid_ogasched(spec, arrivals, eta0, decay, backend, tiling=None):
+    return _vmap_slot(
+        spec, arrivals, eta0, decay, name="ogasched", backend=backend,
+        tiling=tiling,
+    )
 
 
 def _grid_lifecycle(
@@ -328,7 +337,7 @@ def _grid_lifecycle(
     )
 
 
-_run_grid_ogasched = partial(jax.jit, static_argnames=("backend",))(
+_run_grid_ogasched = partial(jax.jit, static_argnames=("backend", "tiling"))(
     _grid_ogasched
 )
 _LIFECYCLE_STATICS = ("name", "backend", "queue_depth", "fault_policy")
@@ -344,7 +353,7 @@ _run_grid_lifecycle = partial(jax.jit, static_argnames=_LIFECYCLE_STATICS)(
 # and None for fault-free grids, where a donate_argnums entry pointing at
 # an empty pytree would be a silent no-op trap.
 _run_grid_ogasched_donated = partial(
-    jax.jit, static_argnames=("backend",), donate_argnums=(1,)
+    jax.jit, static_argnames=("backend", "tiling"), donate_argnums=(1,)
 )(_grid_ogasched)
 _run_grid_lifecycle_donated = partial(
     jax.jit, static_argnames=_LIFECYCLE_STATICS, donate_argnums=(1, 2)
@@ -375,6 +384,7 @@ def run_grid(
     rate_floor: float = 1e-3,
     donate: bool = False,
     fault_policy: lifecycle.FaultPolicy = lifecycle.FaultPolicy(),
+    tiling=None,
 ) -> dict[str, jax.Array] | dict[str, lifecycle.LifecycleTrace]:
     """Run every algorithm over every configuration.
 
@@ -403,6 +413,10 @@ def run_grid(
     is active) runs every lifecycle row against its surviving capacity;
     ``fault_policy`` sets the eviction/retry/backoff knobs (static — one
     compile per policy).
+
+    ``tiling`` (a ``kernels.autotune.KernelConfig``) pins the fused-kernel
+    Pallas tiling for the OGASCHED slot dispatch; default resolves from
+    the autotune cache. Execution layout only — never fingerprinted.
     """
     _check_mode(mode)
     if batch.works is None and needs_works(algorithms, mode):
@@ -437,6 +451,7 @@ def run_grid(
             fn = _run_grid_ogasched_donated if last else _run_grid_ogasched
             out[name] = fn(
                 batch.spec, batch.arrivals, batch.eta0, batch.decay, backend,
+                tiling,
             )
         else:
             out[name] = baselines.run_batch(
@@ -457,6 +472,7 @@ def _sharded_grid_fn(
     mesh: Mesh, name: str, mode: str, backend: str, queue_depth: int,
     fault_policy: lifecycle.FaultPolicy = lifecycle.FaultPolicy(),
     has_faults: bool = False,
+    tiling=None,
 ):
     gspec = P(mesh.axis_names[0])
     if mode == "lifecycle" and has_faults:
@@ -485,6 +501,7 @@ def _sharded_grid_fn(
         def body(spec, arrivals, eta0, decay):
             return _vmap_slot(
                 spec, arrivals, eta0, decay, name=name, backend=backend,
+                tiling=tiling,
             )
         in_specs = (gspec, gspec, gspec, gspec)
     return jax.jit(compat.shard_map(
@@ -511,6 +528,7 @@ def run_grid_sharded(
     queue_depth: int = 8,
     rate_floor: float = 1e-3,
     fault_policy: lifecycle.FaultPolicy = lifecycle.FaultPolicy(),
+    tiling=None,
 ) -> dict[str, jax.Array] | dict[str, lifecycle.LifecycleTrace]:
     """``run_grid`` with the grid axis sharded over a device mesh.
 
@@ -527,7 +545,7 @@ def run_grid_sharded(
         return run_grid(
             batch, algorithms, backend=backend, mode=mode,
             queue_depth=queue_depth, rate_floor=rate_floor,
-            fault_policy=fault_policy,
+            fault_policy=fault_policy, tiling=tiling,
         )
     if batch.works is None and needs_works(algorithms, mode):
         raise ValueError(
@@ -545,7 +563,7 @@ def run_grid_sharded(
     for name in algorithms:
         fn = _sharded_grid_fn(
             mesh, name, mode, _algorithm_backend(name, backend), queue_depth,
-            fault_policy, batch.faults is not None,
+            fault_policy, batch.faults is not None, tiling,
         )
         if mode == "lifecycle" and batch.faults is not None:
             res = fn(
@@ -885,6 +903,7 @@ def run_grid_stream(
     stats: Optional[dict] = None,
     checkpoint: Optional[SweepCheckpoint] = None,
     fault_policy: lifecycle.FaultPolicy = lifecycle.FaultPolicy(),
+    tiling=None,
 ) -> Iterator[tuple[slice, SweepBatch, dict]]:
     """Stream a grid chunk by chunk: yields ``(grid_slice, batch, outputs)``.
 
@@ -951,6 +970,7 @@ def run_grid_stream(
     runner = run_grid_sharded if sharded else run_grid
     kw = {"donate": True} if donate else {}
     kw["fault_policy"] = fault_policy
+    kw["tiling"] = tiling  # execution layout, like donate — not fingerprinted
     it = iter_batches(
         points, chunk_size, mode=mode,
         trace_backend=trace_backend, prefetch=prefetch,
@@ -1003,6 +1023,7 @@ def sweep_stream(
     rate_floor: float = 1e-3,
     checkpoint_dir: Optional[str] = None,
     fault_policy: lifecycle.FaultPolicy = lifecycle.FaultPolicy(),
+    tiling=None,
 ) -> dict[str, np.ndarray]:
     """Full-grid per-config summaries via the streaming driver.
 
@@ -1045,7 +1066,7 @@ def sweep_stream(
         sharded=sharded, backend=backend, trace_backend=trace_backend,
         prefetch=prefetch,
         queue_depth=queue_depth, rate_floor=rate_floor, donate=True,
-        checkpoint=ckpt, fault_policy=fault_policy,
+        checkpoint=ckpt, fault_policy=fault_policy, tiling=tiling,
     ):
         summ = (
             summarize_lifecycle(out, batch) if mode == "lifecycle"

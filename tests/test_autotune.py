@@ -1,0 +1,227 @@
+"""kernels.autotune: the shape-aware tiling cache.
+
+Pins the design contract dispatch relies on:
+
+* ``tune`` is deterministic given a fixed measurement table (ties break
+  toward enumeration order), so CI reruns converge on one winner;
+* corrupt / stale / torn cache state is a MISS, never a crash or a wrong
+  config (same torn-write matrix discipline as tests/test_ckpt);
+* ``resolve`` never measures — the warmed dispatch path performs ZERO
+  autotune measurements and ZERO misses (the CI kernel-gate invariant);
+* winners publish through the atomic ckpt write path (no temp droppings,
+  readable table after every store);
+* shapes bucket (rows to pow2, lanes to the 128 floor) so neighbouring
+  problem sizes share one winner, and the key binds platform + jax
+  version so foreign tables are clean misses.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import autotune, ops
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
+    autotune.reset_cache()
+    autotune.reset_stats()
+    yield
+    autotune.reset_cache()
+    autotune.reset_stats()
+
+
+def _fake_measure(table):
+    """Measurement fn from a fixed {(row_block, method, iters): us} table."""
+    return lambda cfg: table[(cfg.row_block, cfg.method, cfg.iters)]
+
+
+# ------------------------------------------------------------- determinism --
+def test_tune_is_deterministic_given_fixed_measurements():
+    table = {(rb, "sortscan", 0): 100.0 - rb / 2 for rb in autotune.ROW_BLOCKS}
+    table[(32, "sortscan", 0)] = 1.0  # the planted winner
+    win1, m1 = autotune.tune("oga_step", 256, 10, measure=_fake_measure(table))
+    win2, m2 = autotune.tune("oga_step", 256, 10, measure=_fake_measure(table))
+    assert win1 == win2 == autotune.KernelConfig(32, "sortscan", 0)
+    assert m1 == m2
+    # and the stored entry resolves to the same winner
+    assert autotune.resolve("oga_step", 256, 10) == win1
+
+
+def test_tune_ties_break_toward_enumeration_order():
+    table = {(rb, "sortscan", 0): 7.0 for rb in autotune.ROW_BLOCKS}
+    win, _ = autotune.tune("proj", 256, 10, measure=_fake_measure(table))
+    assert win.row_block == autotune.ROW_BLOCKS[0]
+
+
+def test_tune_store_false_does_not_publish():
+    table = {(rb, "sortscan", 0): float(rb) for rb in autotune.ROW_BLOCKS}
+    autotune.tune("proj", 64, 10, measure=_fake_measure(table), store=False)
+    assert autotune.lookup("proj", 64, 10) is None
+    assert not os.path.exists(autotune.cache_path())
+
+
+# ---------------------------------------------------------- candidate space --
+def test_candidates_cap_row_block_at_row_bucket():
+    cands = autotune.candidates("oga_step", 64, 10)
+    assert cands and all(c.row_block <= 64 for c in cands)
+    assert {c.method for c in cands} == {"sortscan"}
+
+
+def test_candidates_bisect_enumerates_iters():
+    cands = autotune.candidates("proj", 256, 10, methods=("bisect",))
+    assert {c.iters for c in cands} == set(autotune.BISECT_ITERS)
+
+
+def test_candidates_vmem_filter_drops_big_sortscan_tiles():
+    cands = autotune.candidates("proj", 4096, 2048)
+    assert cands  # never empty
+    worst = max(c.row_block for c in cands)
+    assert worst < max(autotune.ROW_BLOCKS)  # the filter actually bit
+    p = 2
+    while p < 2 * autotune.lane_pad(2048):
+        p *= 2
+    assert 6 * worst * (2 * p) * 4 <= autotune.VMEM_BUDGET
+
+
+def test_shape_bucketing_shares_winners_between_neighbours():
+    # 250 rows x 10 lanes and 256 rows x 120 lanes land in one bucket
+    assert autotune.cache_key("proj", 250, 10) == autotune.cache_key("proj", 256, 120)
+    table = {(rb, "sortscan", 0): float(rb) for rb in autotune.ROW_BLOCKS}
+    win, _ = autotune.tune("proj", 256, 10, measure=_fake_measure(table))
+    assert autotune.resolve("proj", 250, 120) == win
+    assert autotune.cache_stats()["hits"] == 1
+
+
+# -------------------------------------------------- corrupt / stale = miss --
+def _write_cache(payload) -> str:
+    path = autotune.cache_path()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        if isinstance(payload, str):
+            f.write(payload)
+        else:
+            json.dump(payload, f)
+    autotune.reset_cache()
+    return path
+
+
+def _entry(**kw):
+    ent = {"row_block": 32, "method": "sortscan", "iters": 0, "us": 1.0}
+    ent.update(kw)
+    return {"version": autotune.TABLE_VERSION,
+            "entries": {autotune.cache_key("proj", 256, 10): ent}}
+
+
+@pytest.mark.parametrize("payload", [
+    "{ not json at all",                                     # garbage bytes
+    "",                                                      # truncated empty
+    json.dumps(_entry())[:37],                               # torn mid-write
+    {"version": autotune.TABLE_VERSION + 1, "entries": {}},  # future schema
+    {"entries": "not-a-dict", "version": autotune.TABLE_VERSION},
+    [1, 2, 3],                                               # wrong top type
+], ids=["garbage", "empty", "torn", "version", "schema", "toptype"])
+def test_damaged_table_is_a_miss_not_a_crash(payload):
+    _write_cache(payload)
+    assert autotune.lookup("proj", 256, 10) is None
+    assert autotune.resolve("proj", 256, 10) == autotune.DEFAULT_CONFIG
+    assert autotune.cache_stats()["misses"] == 1
+
+
+@pytest.mark.parametrize("ent_kw", [
+    {"row_block": 24},          # not a legal tile
+    {"row_block": "32"},        # wrong type
+    {"method": "quickselect"},  # unknown method
+    {"iters": -3},              # out of range
+    {"iters": 999},
+    {"row_block": None},
+], ids=["illegal-rb", "str-rb", "method", "neg-iters", "huge-iters", "none-rb"])
+def test_malformed_entry_is_a_miss(ent_kw):
+    _write_cache(_entry(**ent_kw))
+    assert autotune.lookup("proj", 256, 10) is None
+    assert autotune.resolve("proj", 256, 10) == autotune.DEFAULT_CONFIG
+
+
+def test_foreign_platform_or_jax_version_is_a_clean_miss():
+    key = "proj|N256xL128|tpu-v9|jax99.0.0"
+    _write_cache({"version": autotune.TABLE_VERSION,
+                  "entries": {key: {"row_block": 32, "method": "sortscan",
+                                    "iters": 0}}})
+    assert autotune.lookup("proj", 256, 10) is None
+
+
+def test_store_recovers_a_torn_table():
+    _write_cache("{ torn")
+    table = {(rb, "sortscan", 0): float(rb) for rb in autotune.ROW_BLOCKS}
+    win, _ = autotune.tune("proj", 256, 10, measure=_fake_measure(table))
+    assert autotune.lookup("proj", 256, 10) == win
+
+
+# ------------------------------------------------------------ atomic publish --
+def test_store_publishes_atomically_no_temp_droppings():
+    table = {(rb, "sortscan", 0): float(rb) for rb in autotune.ROW_BLOCKS}
+    autotune.tune("proj", 256, 10, measure=_fake_measure(table))
+    autotune.tune("oga_step", 64, 10, measure=_fake_measure(table))
+    cache_dir = os.path.dirname(autotune.cache_path())
+    assert sorted(os.listdir(cache_dir)) == ["autotune.json"]
+    raw = json.load(open(autotune.cache_path()))
+    assert raw["version"] == autotune.TABLE_VERSION
+    assert len(raw["entries"]) == 2  # second store kept the first entry
+
+
+# --------------------------------------------- resolve never measures (pin) --
+def test_resolve_never_measures_even_on_miss():
+    assert autotune.resolve("oga_step", 512, 24) == autotune.DEFAULT_CONFIG
+    assert autotune.measurement_count() == 0
+    assert autotune.cache_stats()["misses"] == 1
+
+
+def test_warmed_dispatch_path_zero_measurements_zero_misses():
+    """The CI kernel-gate invariant: once tuned, production dispatch runs
+    entirely off the table — no re-measurement, no fallback configs."""
+    N, L = 8, 16
+    table = {(rb, "sortscan", 0): float(rb) for rb in autotune.ROW_BLOCKS}
+    autotune.tune("oga_step", N, L, measure=_fake_measure(table))
+    autotune.reset_stats()
+    ones = jnp.ones((N, L))
+    scal = jnp.stack([jnp.full((N,), v) for v in (1.2, 0.4, 5.0, 0.0, 0.5)],
+                     axis=1)
+    ops.oga_step_fused(ones, ones, ones, ones, ones, scal, use_pallas=True)
+    stats = autotune.cache_stats()
+    assert stats["measurements"] == 0
+    assert stats["misses"] == 0
+    assert stats["hits"] >= 1
+
+
+def test_dispatch_forces_sortscan_even_if_cache_says_bisect():
+    """Cache state must never change VALUES, only speed: a (stale) bisect
+    winner contributes its row_block, but production dispatch still runs
+    the exact sortscan method."""
+    N, L = 8, 16
+    _write_cache({"version": autotune.TABLE_VERSION,
+                  "entries": {autotune.cache_key("oga_step", N, L): {
+                      "row_block": 16, "method": "bisect", "iters": 12}}})
+    import numpy as np
+
+    from repro.kernels import ref
+
+    ones = jnp.ones((N, L))
+    scal = jnp.stack([jnp.full((N,), v) for v in (1.2, 0.4, 5.0, 0.0, 0.5)],
+                     axis=1)
+    got = ops.oga_step_fused(ones, ones, ones, ones, ones, scal,
+                             use_pallas=True)
+    want = ref.oga_step_ref(ones, ones, ones, ones, ones, scal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ------------------------------------------------------------- env override --
+def test_cache_path_honours_env_override(tmp_path):
+    assert autotune.cache_path() == str(tmp_path / "autotune.json")
+
+
+def test_kernel_config_is_hashable_jit_static():
+    cfg = autotune.KernelConfig(32, "sortscan", 0)
+    assert hash(cfg) == hash(autotune.KernelConfig(32, "sortscan", 0))
+    assert cfg.to_dict() == {"row_block": 32, "method": "sortscan", "iters": 0}

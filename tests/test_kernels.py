@@ -11,10 +11,11 @@ try:
 except ImportError:  # dependency-free fallback (see _hypothesis_compat)
     from _hypothesis_compat import given, settings, strategies as st
 
-from repro.kernels import ref
+from repro.kernels import autotune, ops, ref, sortscan
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.oga_step import oga_step_fused
 from repro.kernels.proj_bisect import proj_bisect
+from repro.kernels.sortscan import proj_sortscan
 
 
 # ------------------------------------------------------------ projection ---
@@ -83,6 +84,112 @@ def test_proj_bisect_reduced_iters_accuracy():
     assert (np.asarray(got).sum(1) <= np.asarray(c) + 1e-4).all()
 
 
+# ------------------------------------------------------ sortscan projection --
+@pytest.mark.parametrize("N,L", [(4, 8), (16, 24), (33, 130), (8, 1)])
+def test_proj_sortscan_shapes(N, L):
+    """The in-kernel breakpoint sweep is exact: <= 1e-6 of the float64
+    numpy oracle (vs the bisect kernel's 5e-5)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(N), L)
+    kz, ka, km, kc = jax.random.split(key, 4)
+    z = jax.random.normal(kz, (N, L)) * 5
+    a = jax.random.uniform(ka, (N, L), minval=0.1, maxval=4.0)
+    mask = (jax.random.uniform(km, (N, L)) < 0.8).astype(jnp.float32)
+    c = jax.random.uniform(kc, (N,), minval=0.3, maxval=6.0)
+    got = proj_sortscan(z, a, mask, c, interpret=True)
+    want = ref.proj_rows_exact_np(z, a, mask, c)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-6)
+
+
+@pytest.mark.parametrize("row_block", list(autotune.ROW_BLOCKS))
+def test_proj_sortscan_parity_every_autotuned_tile(row_block):
+    """Oracle parity at EVERY tiling the autotuner may pick, and bitwise
+    equality across tilings — rows are independent, so the tile sets the
+    grid shape only, never the values (the autotune cache must not be able
+    to change results, only speed)."""
+    N, L = 33, 130
+    key = jax.random.PRNGKey(7)
+    kz, ka, km, kc = jax.random.split(key, 4)
+    z = jax.random.normal(kz, (N, L)) * 5
+    a = jax.random.uniform(ka, (N, L), minval=0.1, maxval=4.0)
+    mask = (jax.random.uniform(km, (N, L)) < 0.8).astype(jnp.float32)
+    c = jax.random.uniform(kc, (N,), minval=0.3, maxval=6.0)
+    got = proj_sortscan(z, a, mask, c, row_block=row_block, interpret=True)
+    want = ref.proj_rows_exact_np(z, a, mask, c)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-6)
+    base = proj_sortscan(
+        z, a, mask, c, row_block=autotune.DEFAULT_ROW_BLOCK, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_proj_sortscan_property_feasibility(seed):
+    key = jax.random.PRNGKey(seed)
+    kz, ka, km, kc = jax.random.split(key, 4)
+    z = jax.random.normal(kz, (8, 16)) * 10
+    a = jax.random.uniform(ka, (8, 16), minval=0.05, maxval=3.0)
+    mask = (jax.random.uniform(km, (8, 16)) < 0.7).astype(jnp.float32)
+    c = jax.random.uniform(kc, (8,), minval=0.1, maxval=5.0)
+    y = np.asarray(proj_sortscan(z, a, mask, c, interpret=True))
+    assert (y >= -1e-6).all()
+    assert (y <= np.asarray(a) + 1e-6).all()
+    assert (np.abs(y * (1 - np.asarray(mask))) < 1e-6).all()
+    assert (y.sum(1) <= np.asarray(c) + 1e-5).all()
+
+
+def test_bitonic_sort_pairs_unit():
+    """The matmul-only bitonic network sorts ascending with the payload
+    riding its value exactly (distinct keys)."""
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(3, 16)).astype(np.float32)
+    d = rng.normal(size=(3, 16)).astype(np.float32)
+    vs, ds = sortscan._bitonic_sort_pairs(jnp.asarray(v), jnp.asarray(d))
+    order = np.argsort(v, axis=1)
+    np.testing.assert_array_equal(np.asarray(vs), np.take_along_axis(v, order, 1))
+    np.testing.assert_array_equal(np.asarray(ds), np.take_along_axis(d, order, 1))
+
+
+def test_scan_matmul_helpers_unit():
+    """Cumsum / shift / XOR-partner as constant 0-1 matmuls (the Mosaic-safe
+    substitutes for scan, roll, and gather)."""
+    x = jnp.asarray([[1.0, 2.0, 3.0, 4.0]])
+    np.testing.assert_array_equal(
+        np.asarray(sortscan._dot(x, sortscan._tri_mat(4))), [[1.0, 3.0, 6.0, 10.0]]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sortscan._dot(x, sortscan._shift_mat(4))), [[0.0, 1.0, 2.0, 3.0]]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sortscan._dot(x, sortscan._partner_mat(4, 1))),
+        [[2.0, 1.0, 4.0, 3.0]],
+    )
+    np.testing.assert_array_equal(
+        np.asarray(sortscan._dot(x, sortscan._partner_mat(4, 2))),
+        [[3.0, 4.0, 1.0, 2.0]],
+    )
+
+
+def test_ops_proj_sortscan_dispatcher_paths():
+    """Both dispatch arms of ops.proj_sortscan agree with the oracle: the
+    off-TPU jnp sweep and the Pallas kernel under an explicitly pinned
+    tiling (no cache read)."""
+    key = jax.random.PRNGKey(11)
+    kz, ka, kc = jax.random.split(key, 3)
+    z = jax.random.normal(kz, (17, 40)) * 5
+    a = jax.random.uniform(ka, (17, 40), minval=0.1, maxval=4.0)
+    mask = jnp.ones((17, 40))
+    c = jax.random.uniform(kc, (17,), minval=0.3, maxval=6.0)
+    want = ref.proj_rows_exact_np(z, a, mask, c)
+    got_jnp = ops.proj_sortscan(z, a, mask, c, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got_jnp), want, atol=1e-6)
+    got_pl = ops.proj_sortscan(
+        z, a, mask, c, use_pallas=True,
+        tiling=autotune.KernelConfig(16, "sortscan", 0),
+    )
+    np.testing.assert_allclose(np.asarray(got_pl), want, atol=1e-6)
+
+
 # --------------------------------------------------------------- oga step --
 @pytest.mark.parametrize("N,L", [(6, 10), (24, 48)])
 def test_oga_step_fused_vs_ref(N, L):
@@ -107,6 +214,48 @@ def test_oga_step_fused_vs_ref(N, L):
     got = oga_step_fused(y, a, mask, x, kstar, scal, interpret=True)
     want = ref.oga_step_ref(y, a, mask, x, kstar, scal)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("N,L", [(6, 10), (24, 48)])
+def test_oga_step_method_ab_sortscan_vs_bisect(N, L):
+    """The retired-default bisect stays available as method="bisect" for
+    A/B: both methods match the reference, and each other."""
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(1), N), L
+    )
+    ks = jax.random.split(key, 7)
+    y = jax.random.uniform(ks[0], (N, L), maxval=2.0)
+    a = jax.random.uniform(ks[1], (N, L), minval=0.5, maxval=3.0)
+    mask = (jax.random.uniform(ks[2], (N, L)) < 0.8).astype(jnp.float32)
+    y = jnp.minimum(y, a) * mask
+    x = (jax.random.uniform(ks[3], (N, L)) < 0.7).astype(jnp.float32)
+    kstar = (jax.random.uniform(ks[4], (N, L)) < 0.2).astype(jnp.float32)
+    scal = jnp.stack(
+        [
+            jax.random.uniform(ks[5], (N,), minval=1.0, maxval=1.5),
+            jax.random.uniform(ks[6], (N,), minval=0.3, maxval=0.5),
+            jax.random.uniform(ks[0], (N,), minval=1.0, maxval=8.0),
+            jnp.asarray(np.arange(N) % 4, jnp.float32),
+            jnp.full((N,), 0.7),
+        ],
+        axis=1,
+    )
+    want = np.asarray(ref.oga_step_ref(y, a, mask, x, kstar, scal))
+    got_ss = oga_step_fused(
+        y, a, mask, x, kstar, scal, method="sortscan", interpret=True
+    )
+    got_bi = oga_step_fused(
+        y, a, mask, x, kstar, scal, method="bisect", interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(got_ss), want, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(got_bi), want, atol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(got_ss), np.asarray(got_bi), atol=5e-5
+    )
+    with pytest.raises(ValueError):
+        oga_step_fused(
+            y, a, mask, x, kstar, scal, method="newton", interpret=True
+        )
 
 
 def test_oga_step_fused_handles_infeasible_input():

@@ -369,6 +369,82 @@ def test_capacity_subtraction_of_constant_is_clean():
     assert _lint("def f(c):\n    return c - 1.0\n") == []
 
 
+# --------------------------------------------------------------- hardcoded-tiling
+# the PR 10 class: a tile constant spelled outside kernels/autotune.py is a
+# knob the autotuner cannot see (how the PR 4 hand-picked ROW_BLOCK = 8
+# survived four releases past its sell-by date)
+TILING_BAD = """
+    from jax.experimental import pallas as pl
+
+    ROW_BLOCK = 8
+    FLASH_BLOCK_Q = 128
+    TILE_SHAPES = (8, 16, 32)
+
+    def call(kernel, zp, Lp):
+        return pl.pallas_call(
+            kernel,
+            in_specs=[pl.BlockSpec((64, Lp), lambda i: (i, 0))],
+        )(zp)
+"""
+
+TILING_GOOD = """
+    from jax.experimental import pallas as pl
+
+    from repro.kernels import autotune
+
+    ROW_BLOCK = autotune.DEFAULT_ROW_BLOCK   # reference, not a literal
+    MULTICLASS_ITERS = 24                    # a solver knob, not a tile
+
+    def call(kernel, zp, rb, Lp):
+        return pl.pallas_call(
+            kernel,
+            in_specs=[pl.BlockSpec((rb, Lp), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((1, 1, rb, Lp), lambda i: (0, 0, i, 0)),
+        )(zp)
+"""
+
+
+def test_hardcoded_tiling_fixture_is_flagged():
+    found = _lint(TILING_BAD)
+    assert _rules_of(found) == {"hardcoded-tiling"}
+    # ROW_BLOCK, FLASH_BLOCK_Q, TILE_SHAPES + the BlockSpec 64
+    assert len(found) == 4
+    msgs = " ".join(f.message for f in found)
+    assert "autotune" in msgs
+
+
+def test_autotune_references_and_blockspec_vars_are_clean():
+    assert _lint(TILING_GOOD) == []
+
+
+def test_tiling_literals_allowed_in_autotune_home():
+    src = "ROW_BLOCKS = (8, 16, 32, 64, 128)\nLANE_FLOOR = 128\n"
+    assert lint_source(src, "src/repro/kernels/autotune.py") == []
+    assert len(lint_source(src, "src/repro/kernels/oga_step.py")) == 2
+
+
+def test_hardcoded_tiling_suppression_budget():
+    """At most ONE reviewed hardcoded-tiling suppression repo-wide (the
+    Pallas lane-width floor carve-out)."""
+    import os
+    import re
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    hits = []
+    for d in ("src", "benchmarks"):
+        for root, _, files in os.walk(os.path.join(repo, d)):
+            for fn in files:
+                if not fn.endswith(".py"):
+                    continue
+                with open(os.path.join(root, fn), encoding="utf-8") as f:
+                    for i, ln in enumerate(f, 1):
+                        if re.search(
+                            r"lint:\s*disable=.*hardcoded-tiling", ln
+                        ):
+                            hits.append(f"{fn}:{i}")
+    assert len(hits) <= 1, hits
+
+
 # ------------------------------------------------------------------ suppression
 def test_same_line_suppression():
     src = SEED_OFFSET_BAD.replace(
@@ -409,8 +485,8 @@ def test_syntax_error_is_a_finding_not_a_crash():
 
 
 # ------------------------------------------------------------- registry and API
-def test_at_least_nine_rules_registered():
-    assert len(RULES) >= 9
+def test_at_least_ten_rules_registered():
+    assert len(RULES) >= 10
     expected = {
         "aliased-buffer-dispatch",
         "rng-offset-derivation",
@@ -421,6 +497,7 @@ def test_at_least_nine_rules_registered():
         "donation-use-after-dispatch",
         "impure-scan-body",
         "unvalidated-capacity-mask",
+        "hardcoded-tiling",
     }
     assert expected <= set(RULES)
 
